@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per row). Default sizes are
+CPU-bounded; REPRO_BENCH_FULL=1 runs paper-scale versions. Select subsets
+with ``python -m benchmarks.run --tables mnist_ae,savings_ratio``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="all",
+                    help="comma-separated table names (or 'all')")
+    args = ap.parse_args()
+
+    from benchmarks.tables import ALL_TABLES
+    selected = {t.strip() for t in args.tables.split(",")}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in ALL_TABLES:
+        if args.tables != "all" and name not in selected:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:                        # noqa: BLE001
+            print(f"{name},0,ERROR: {e!r}")
+            failures += 1
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        print(f"# table {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

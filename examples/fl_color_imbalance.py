@@ -1,0 +1,62 @@
+"""Paper §5.2 (Figs. 8/9): two-collaborator FL with color imbalance.
+
+Collaborator 0 trains on color images, collaborator 1 on grayscale. Updates
+are AE-compressed every communication round; the sawtooth accuracy/loss
+pattern (dip after each aggregation) shows federation is really happening
+while the pipe carries only latents.
+
+Run: PYTHONPATH=src python examples/fl_color_imbalance.py [--rounds N]
+"""
+import argparse
+
+import jax
+
+from repro.configs.paper import CIFAR_CLASSIFIER, cifar_ae_for
+from repro.core import FCAECompressor, FLConfig, FederatedRun, run_prepass
+from repro.data.pipeline import cifar_like, color_imbalance_split
+from repro.models.classifiers import init_classifier, n_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--n", type=int, default=256, help="samples/collab")
+    args = ap.parse_args()
+
+    P = n_params(init_classifier(jax.random.PRNGKey(0), CIFAR_CLASSIFIER))
+    ae_cfg = cifar_ae_for(P)
+    print(f"== 2-collaborator FL, CIFAR-CNN {P} params, "
+          f"AE {ae_cfg.n_params} params, {ae_cfg.compression_ratio:.0f}x ==")
+
+    datasets, eval_data = color_imbalance_split(0, args.n)
+    comps = []
+    for ci, d in enumerate(datasets):
+        kind = "color" if ci == 0 else "grayscale"
+        print(f"pre-pass for collaborator {ci} ({kind}) ...")
+        out = run_prepass(jax.random.PRNGKey(10 + ci), CIFAR_CLASSIFIER,
+                          ae_cfg, d, prepass_epochs=5, ae_epochs=6)
+        comps.append(FCAECompressor(out["ae_params"], ae_cfg))
+
+    run = FederatedRun(
+        CIFAR_CLASSIFIER, datasets,
+        FLConfig(n_rounds=args.rounds, local_epochs=args.local_epochs,
+                 payload="weights"),    # paper §5.2: converged weights
+        compressors=comps, eval_data=eval_data)
+
+    def progress(rec):
+        cacc = [m.get("accuracy", 0.0) for m in rec.collab_metrics]
+        print(f"round {rec.round:3d}: global_acc="
+              f"{rec.global_metrics['accuracy']:.3f} "
+              f"collab_acc={[f'{a:.3f}' for a in cacc]} "
+              f"ratio={rec.compression_ratio:.0f}x")
+
+    run.run(progress)
+    totals = run.total_bytes()
+    print(f"total upstream bytes: {totals['bytes_up']:.2e} "
+          f"(raw {totals['bytes_up_raw']:.2e}) -> effective "
+          f"{totals['effective_ratio']:.0f}x reduction")
+
+
+if __name__ == "__main__":
+    main()

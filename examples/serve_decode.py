@@ -1,0 +1,69 @@
+"""Batched serving example: prefill a prompt batch, then decode tokens with
+the KV/state cache — the same prefill/decode steps the dry-run lowers at
+(32, 32768) and (128, 32768) scale, here CPU-sized.
+
+Works for every architecture family, including attention-free (mamba2) and
+hybrid (recurrentgemma) whose decode state is O(1) in context length.
+
+Run: PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_step, init_params, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding-window decode (long-context mode)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    k = jax.random.PRNGKey(1)
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            k, (B, cfg.encdec.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            k, (B, cfg.vlm.n_image_tokens, cfg.d_model))
+
+    cache_len = S + args.new_tokens
+    prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b, cache_len=cache_len,
+                                              window=args.window))
+    step_fn = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c,
+                                                  window=args.window))
+
+    t0 = time.time()
+    logits, cache = prefill_fn(params, batch)
+    print(f"== {cfg.name}: prefilled {B}x{S} in {time.time() - t0:.2f}s ==")
+
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(
+        jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, cache = step_fn(params, tok, cache)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(
+            jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"decoded {args.new_tokens - 1} tokens/seq in {dt:.2f}s "
+          f"({(args.new_tokens - 1) * B / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Regenerate the §Tables appendix of EXPERIMENTS.md from the final dry-run
+JSONL reports. Usage: PYTHONPATH=src python reports/build_tables.py"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.roofline.report import fmt_table, load  # noqa: E402
+
+BASE = os.path.dirname(__file__)
+EXP = os.path.join(BASE, "..", "EXPERIMENTS.md")
+MARK = "(Generated from `reports/dryrun/final_*.jsonl`"
+
+
+def xpod_table() -> str:
+    base = {json.loads(l)["arch"]: json.loads(l)
+            for l in open(os.path.join(BASE, "dryrun/xpod_base.jsonl"))}
+    fl = {json.loads(l)["arch"]: json.loads(l)
+          for l in open(os.path.join(BASE, "dryrun/xpod_fl.jsonl"))}
+    out = ["**Cross-pod bytes per device per step (train_4k, 2×16×16): "
+           "baseline all-reduce vs AE-compressed federated round**\n\n",
+           "| arch | baseline cross-pod GB | FL cross-pod GB | reduction |\n",
+           "|---|---:|---:|---:|\n"]
+    for a, b in base.items():
+        f = fl.get(a)
+        if not f:
+            continue
+        bb = b["cross_pod_gb_per_dev"]
+        ff = f["cross_pod_gb_per_dev"]
+        red = bb / ff if ff else float("inf")
+        out.append(f"| {a} | {bb:.4f} | {ff:.6f} | {red:,.0f}x |\n")
+    return "".join(out)
+
+
+def main():
+    text = open(EXP).read()
+    idx = text.index(MARK)
+    head = text[:idx]
+    parts = [head, MARK + " by `reports/build_tables.py`.)\n\n"]
+    parts.append(xpod_table() + "\n")
+    for fname, cap in (
+        ("dryrun/final_single.jsonl",
+         "Roofline baselines — all 40 (arch × shape), single-pod 16×16"),
+        ("dryrun/final_multi.jsonl",
+         "Multi-pod 2×16×16 — all 40 (arch × shape)"),
+        ("dryrun/final_fl_multi.jsonl",
+         "Federated rounds (chunked-AE pod exchange), 2×16×16"),
+    ):
+        rows = load(os.path.join(BASE, fname))
+        parts.append(fmt_table(rows, cap) + "\n")
+    open(EXP, "w").write("".join(parts))
+    print("EXPERIMENTS.md §Tables rebuilt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Pytree checkpointing: flat-key npz with dtype/shape round-trip, plus a
+round-resumable federated-state wrapper.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return f"[{entry.idx}]"
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_pytree(path: str, tree: Pytree, metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 has no numpy dtype — store as uint16 view + dtype tag
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16) if hasattr(v, "view") else \
+                np.asarray(jnp.asarray(v).view(jnp.uint16))
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            dtypes[k] = str(v.dtype)
+    arrays["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8)
+    if metadata is not None:
+        arrays["__meta__"] = np.frombuffer(
+            json.dumps(metadata).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, like: Pytree) -> Tuple[Pytree, Optional[dict]]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        dtypes = json.loads(bytes(data["__dtypes__"]).decode())
+        meta = json.loads(bytes(data["__meta__"]).decode()) \
+            if "__meta__" in data else None
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        restored = []
+        for pth, leaf in leaves:
+            key = _SEP.join(_path_str(p) for p in pth)
+            arr = data[key]
+            if dtypes[key] == "bfloat16":
+                arr = jnp.asarray(arr).view(jnp.bfloat16)
+            restored.append(jnp.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, restored), meta
+
+
+def save_federated_state(path: str, round_idx: int, global_params: Pytree,
+                         extra: Optional[dict] = None):
+    save_pytree(path, {"global": global_params},
+                metadata={"round": round_idx, **(extra or {})})
+
+
+def load_federated_state(path: str, like_params: Pytree
+                         ) -> Tuple[int, Pytree, dict]:
+    tree, meta = load_pytree(path, {"global": like_params})
+    return int(meta["round"]), tree["global"], meta

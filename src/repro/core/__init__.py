@@ -1,0 +1,39 @@
+"""The paper's primary contribution: autoencoder-compressed weight-update
+communication for federated learning, as a composable JAX library."""
+from repro.core.aggregate import apply_update, fedavg, weighted_mean  # noqa: F401
+from repro.core.autoencoder import (  # noqa: F401
+    ChunkedAEConfig,
+    ConvAEConfig,
+    ae_accuracy,
+    ae_loss,
+    ae_param_count,
+    chunked_decode,
+    chunked_encode,
+    conv_decode,
+    conv_encode,
+    decoder_param_count,
+    fc_decode,
+    fc_encode,
+    fc_reconstruct,
+    init_chunked_ae,
+    init_conv_ae,
+    init_fc_ae,
+    train_autoencoder,
+)
+from repro.core.compressor import (  # noqa: F401
+    ChunkedAECompressor,
+    ComposedCompressor,
+    Compressor,
+    FCAECompressor,
+    IdentityCompressor,
+    QuantizeCompressor,
+    TopKCompressor,
+)
+from repro.core.federated import (  # noqa: F401
+    FLConfig,
+    FederatedRun,
+    RoundRecord,
+    validation_model_curve,
+)
+from repro.core.prepass import evaluate, local_train, run_prepass  # noqa: F401
+from repro.core.savings import SavingsModel, sweep_collaborators, sweep_rounds  # noqa: F401

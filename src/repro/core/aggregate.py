@@ -1,0 +1,46 @@
+"""Aggregation algorithms over (decoded) collaborator updates.
+
+FedAvg (McMahan et al., 2017): sample-count-weighted mean of updates.
+FedProx (Li et al., 2018): FedAvg aggregation; the proximal term lives in the
+collaborator's local loss (see prepass.local_train(prox_mu=...)).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def weighted_mean(updates: Sequence[Pytree],
+                  weights: Optional[Sequence[float]] = None) -> Pytree:
+    n = len(updates)
+    if weights is None:
+        weights = [1.0] * n
+    total = float(sum(weights))
+    norm = [w / total for w in weights]
+
+    def combine(*leaves):
+        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for w, leaf in zip(norm, leaves):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(combine, *updates)
+
+
+def apply_update(global_params: Pytree, mean_update: Pytree,
+                 server_lr: float = 1.0) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + server_lr * u.astype(jnp.float32)).astype(p.dtype),
+        global_params, mean_update)
+
+
+def fedavg(global_params: Pytree, updates: Sequence[Pytree],
+           weights: Optional[Sequence[float]] = None,
+           server_lr: float = 1.0) -> Pytree:
+    return apply_update(global_params, weighted_mean(updates, weights),
+                        server_lr)

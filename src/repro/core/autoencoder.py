@@ -1,0 +1,332 @@
+"""Autoencoders over weight-update vectors — the paper's core mechanism.
+
+Three AE families, all trained with the paper's reconstruction loss (Eq. 3):
+
+* **Fully-connected funnel AE** (paper §3/§4): input/output width equals the
+  flattened parameter count of the collaborator model; hidden widths shrink
+  to a ``latent_dim`` bottleneck (Fig. 1). ``z = act(Wx+b)`` stacks (Eq. 1/2).
+  This is the paper-faithful variant used for the MNIST/CIFAR collaborators.
+* **Chunked (shared) AE** — the TPU-native scaling of the paper's
+  convolutional-AE insight (§4.3): the flat update is reshaped into
+  ``(num_chunks, chunk_size)`` and one small funnel AE is shared across
+  chunks. Compression ratio = chunk_size / latent_chunk; the encode is a
+  single MXU-shaped matmul over the chunk batch (see kernels/ae_encode.py).
+* **Conv1d AE** (paper appendix): strided depthwise+pointwise conv encoder /
+  transposed decoder over the flat vector — included for the paper's
+  "probe further research" variant and ablations.
+
+All trainers normalize inputs with dataset-level (mean, std) kept inside the
+AE state, so compression is scale-free across rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import AEConfig
+from repro.models.common import activation_fn
+
+Params = Dict[str, Any]
+
+
+# =====================================================================
+# fully-connected funnel AE (paper-faithful)
+# =====================================================================
+def _fc_dims(cfg: AEConfig) -> Tuple[List[int], List[int]]:
+    enc = [cfg.input_dim, *cfg.encoder_hidden, cfg.latent_dim]
+    dec = [cfg.latent_dim, *reversed(cfg.encoder_hidden), cfg.input_dim]
+    return enc, dec
+
+
+def init_fc_ae(rng: jax.Array, cfg: AEConfig) -> Params:
+    enc_dims, dec_dims = _fc_dims(cfg)
+    n = len(enc_dims) + len(dec_dims) - 2
+    keys = jax.random.split(rng, n)
+
+    def dense(k, a, b):
+        return {"w": jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5),
+                "b": jnp.zeros((b,), jnp.float32)}
+
+    ki = iter(keys)
+    return {
+        "enc": [dense(next(ki), a, b)
+                for a, b in zip(enc_dims[:-1], enc_dims[1:])],
+        "dec": [dense(next(ki), a, b)
+                for a, b in zip(dec_dims[:-1], dec_dims[1:])],
+        "norm": {"mean": jnp.zeros((), jnp.float32),
+                 "std": jnp.ones((), jnp.float32)},
+    }
+
+
+def _run_stack(stack: Sequence[Params], x: jax.Array, act, final_act) -> jax.Array:
+    for i, layer in enumerate(stack):
+        x = x @ layer["w"] + layer["b"]
+        x = act(x) if i < len(stack) - 1 else final_act(x)
+    return x
+
+
+def fc_encode(params: Params, cfg: AEConfig, x: jax.Array) -> jax.Array:
+    """x: (..., input_dim) → latent (..., latent_dim). Eq. 1."""
+    act = activation_fn(cfg.activation)
+    xn = (x - params["norm"]["mean"]) / params["norm"]["std"]
+    return _run_stack(params["enc"], xn, act, act)
+
+
+def fc_decode(params: Params, cfg: AEConfig, z: jax.Array) -> jax.Array:
+    """latent → reconstructed update (Eq. 2)."""
+    act = activation_fn(cfg.activation)
+    final = activation_fn(cfg.final_activation)
+    xn = _run_stack(params["dec"], z, act, final)
+    return xn * params["norm"]["std"] + params["norm"]["mean"]
+
+
+def fc_reconstruct(params: Params, cfg: AEConfig, x: jax.Array) -> jax.Array:
+    return fc_decode(params, cfg, fc_encode(params, cfg, x))
+
+
+# =====================================================================
+# chunked shared AE (TPU-scale variant)
+# =====================================================================
+@dataclasses.dataclass(frozen=True)
+class ChunkedAEConfig:
+    chunk_size: int = 4096
+    hidden: Tuple[int, ...] = (512,)
+    latent_chunk: int = 8            # → 512x per-chunk compression
+    activation: str = "relu"
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.chunk_size / self.latent_chunk
+
+    def as_fc(self) -> AEConfig:
+        return AEConfig(input_dim=self.chunk_size,
+                        encoder_hidden=self.hidden,
+                        latent_dim=self.latent_chunk,
+                        activation=self.activation)
+
+
+def init_chunked_ae(rng: jax.Array, cfg: ChunkedAEConfig) -> Params:
+    return init_fc_ae(rng, cfg.as_fc())
+
+
+def chunk_vector(flat: jax.Array, chunk_size: int) -> Tuple[jax.Array, int]:
+    """Pad a flat vector to a chunk multiple and reshape (n_chunks, chunk)."""
+    n = flat.shape[0]
+    pad = (-n) % chunk_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, chunk_size), n
+
+
+def unchunk_vector(chunks: jax.Array, orig_len: int) -> jax.Array:
+    return chunks.reshape(-1)[:orig_len]
+
+
+def chunked_encode(params: Params, cfg: ChunkedAEConfig,
+                   flat: jax.Array) -> jax.Array:
+    chunks, _ = chunk_vector(flat, cfg.chunk_size)
+    return fc_encode(params, cfg.as_fc(), chunks)     # (n_chunks, latent)
+
+
+def chunked_decode(params: Params, cfg: ChunkedAEConfig,
+                   latents: jax.Array, orig_len: int) -> jax.Array:
+    chunks = fc_decode(params, cfg.as_fc(), latents)
+    return unchunk_vector(chunks, orig_len)
+
+
+# =====================================================================
+# conv1d AE (paper appendix variant)
+# =====================================================================
+@dataclasses.dataclass(frozen=True)
+class ConvAEConfig:
+    channels: Tuple[int, ...] = (16, 32)
+    kernel: int = 9
+    stride: int = 8                    # per stage → total ratio stride**n/ch
+    latent_channels: int = 1
+
+    def total_stride(self) -> int:
+        return self.stride ** len(self.channels)
+
+
+def init_conv_ae(rng: jax.Array, cfg: ConvAEConfig) -> Params:
+    keys = jax.random.split(rng, 2 * len(cfg.channels) + 2)
+    enc, dec = [], []
+    c_in = 1
+    ki = iter(keys)
+    for c_out in cfg.channels:
+        k = next(ki)
+        enc.append({"w": jax.random.normal(
+            k, (cfg.kernel, c_in, c_out), jnp.float32)
+            * (cfg.kernel * c_in) ** -0.5,
+            "b": jnp.zeros((c_out,), jnp.float32)})
+        c_in = c_out
+    k = next(ki)
+    enc.append({"w": jax.random.normal(
+        k, (1, c_in, cfg.latent_channels), jnp.float32) * c_in ** -0.5,
+        "b": jnp.zeros((cfg.latent_channels,), jnp.float32)})
+    c_in = cfg.latent_channels
+    for c_out in reversed(cfg.channels):
+        k = next(ki)
+        dec.append({"w": jax.random.normal(
+            k, (cfg.kernel, c_in, c_out), jnp.float32)
+            * (cfg.kernel * c_in) ** -0.5,
+            "b": jnp.zeros((c_out,), jnp.float32)})
+        c_in = c_out
+    k = next(ki)
+    dec.append({"w": jax.random.normal(k, (1, c_in, 1), jnp.float32)
+                * c_in ** -0.5, "b": jnp.zeros((1,), jnp.float32)})
+    return {"enc": enc, "dec": dec,
+            "norm": {"mean": jnp.zeros((), jnp.float32),
+                     "std": jnp.ones((), jnp.float32)}}
+
+
+def conv_encode(params: Params, cfg: ConvAEConfig, x: jax.Array) -> jax.Array:
+    """x: (B, length) → (B, length/total_stride, latent_channels)."""
+    h = ((x - params["norm"]["mean"]) / params["norm"]["std"])[..., None]
+    for i, layer in enumerate(params["enc"][:-1]):
+        h = jax.lax.conv_general_dilated(
+            h, layer["w"], (cfg.stride,), "SAME",
+            dimension_numbers=("NWC", "WIO", "NWC")) + layer["b"]
+        h = jax.nn.relu(h)
+    last = params["enc"][-1]
+    return jax.lax.conv_general_dilated(
+        h, last["w"], (1,), "SAME",
+        dimension_numbers=("NWC", "WIO", "NWC")) + last["b"]
+
+
+def conv_decode(params: Params, cfg: ConvAEConfig, z: jax.Array) -> jax.Array:
+    h = z
+    for layer in params["dec"][:-1]:
+        h = jax.lax.conv_transpose(
+            h, layer["w"], (cfg.stride,), "SAME",
+            dimension_numbers=("NWC", "WIO", "NWC")) + layer["b"]
+        h = jax.nn.relu(h)
+    last = params["dec"][-1]
+    h = jax.lax.conv_general_dilated(
+        h, last["w"], (1,), "SAME",
+        dimension_numbers=("NWC", "WIO", "NWC")) + last["b"]
+    out = h[..., 0]
+    return out * params["norm"]["std"] + params["norm"]["mean"]
+
+
+# =====================================================================
+# AE training (paper Eq. 3: L = ||x - x'||^2) with Adam
+# =====================================================================
+def ae_loss(params: Params, cfg, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "fc":
+        x_hat = fc_reconstruct(params, cfg, x)
+    elif kind == "conv":
+        x_hat = conv_decode(params, cfg, conv_encode(params, cfg, x))
+    else:
+        raise ValueError(kind)
+    return jnp.mean(jnp.square(x - x_hat))
+
+
+def ae_accuracy(params: Params, cfg, x: jax.Array, kind: str = "fc",
+                tol: float = 0.05) -> jax.Array:
+    """The paper's "accuracy" metric for AE training (Figs. 4/6): fraction of
+    reconstructed weights within a tolerance band of the originals, measured
+    in units of the dataset std."""
+    if kind == "fc":
+        x_hat = fc_reconstruct(params, cfg, x)
+    else:
+        x_hat = conv_decode(params, cfg, conv_encode(params, cfg, x))
+    scale = params["norm"]["std"]
+    return jnp.mean((jnp.abs(x - x_hat) <= tol * scale).astype(jnp.float32))
+
+
+def fit_normalizer(params: Params, dataset: jax.Array) -> Params:
+    mean = jnp.mean(dataset)
+    std = jnp.maximum(jnp.std(dataset), 1e-8)
+    return dict(params, norm={"mean": mean, "std": std})
+
+
+def train_autoencoder(
+    rng: jax.Array,
+    cfg,
+    dataset: jax.Array,              # (n_samples, input_dim) weight vectors
+    *,
+    kind: str = "fc",
+    epochs: int = 200,
+    batch_size: int = 8,
+    lr: float = 1e-3,
+    val_fraction: float = 0.2,
+    init: Optional[Params] = None,
+) -> Tuple[Params, Dict[str, list]]:
+    """Train an AE on a weights dataset; returns (params, history)."""
+    n = dataset.shape[0]
+    n_val = max(1, int(n * val_fraction)) if n > 2 else 0
+    k_init, k_shuf, k_split = jax.random.split(rng, 3)
+    # random (not tail) val split: the tail snapshots are the converged
+    # weights the codec most needs to reconstruct — don't hold them all out
+    order = jax.random.permutation(k_split, n)
+    shuffled_all = dataset[order]
+    train_set, val_set = shuffled_all[:n - n_val], shuffled_all[n - n_val:]
+    if init is None:
+        if kind == "fc":
+            params = init_fc_ae(k_init, cfg)
+        else:
+            params = init_conv_ae(k_init, cfg)
+    else:
+        params = init
+    params = fit_normalizer(params, train_set)
+
+    # Adam state
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, x: ae_loss(p, cfg, x, kind)))
+    acc_fn = jax.jit(lambda p, x: ae_accuracy(p, cfg, x, kind))
+
+    @jax.jit
+    def adam_update(p, g, m, v, t):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(
+            lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        def upd(pl, ml, vl):
+            mh = ml / (1 - b1 ** t)
+            vh = vl / (1 - b2 ** t)
+            return pl - lr * mh / (jnp.sqrt(vh) + eps)
+        return jax.tree_util.tree_map(upd, p, m, v), m, v
+
+    history = {"loss": [], "accuracy": [], "val_loss": [], "val_accuracy": []}
+    bs = min(batch_size, max(1, train_set.shape[0]))
+    step = 0
+    for epoch in range(epochs):
+        k_shuf, k = jax.random.split(k_shuf)
+        order = jax.random.permutation(k, train_set.shape[0])
+        shuffled = train_set[order]
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, shuffled.shape[0] - bs + 1, bs):
+            xb = shuffled[i:i + bs]
+            loss, g = loss_grad(params, xb)
+            # norm stats are data statistics, not trainable
+            g = dict(g, norm=jax.tree_util.tree_map(jnp.zeros_like,
+                                                    g["norm"]))
+            step += 1
+            params, m, v = adam_update(params, g, m, v, step)
+            ep_loss += float(loss)
+            nb += 1
+        history["loss"].append(ep_loss / max(nb, 1))
+        history["accuracy"].append(float(acc_fn(params, train_set)))
+        if n_val:
+            vl, _ = loss_grad(params, val_set)
+            history["val_loss"].append(float(vl))
+            history["val_accuracy"].append(float(acc_fn(params, val_set)))
+    return params, history
+
+
+def ae_param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(
+        {"enc": params["enc"], "dec": params["dec"]}))
+
+
+def decoder_param_count(params: Params) -> int:
+    """Size of the decoder half — the pre-pass shipping cost (Eq. 5/6)."""
+    return sum(x.size for x in jax.tree_util.tree_leaves(params["dec"]))

@@ -1,0 +1,210 @@
+"""Weight-update compressors: the collaborator→aggregator codec API.
+
+``Compressor.encode`` runs on the collaborator (the paper's encoder side),
+``Compressor.decode`` on the aggregator (decoder side). All compressors are
+pytree→pytree: they flatten the update with ``ravel_pytree``, compress the
+flat vector, and unflatten on decode, so they work for every architecture in
+the zoo (§Arch-applicability in DESIGN.md).
+
+Implementations:
+* Identity           — baseline (no compression)
+* Quantize (int8/4)  — the traditional baseline the paper cites (FedPAQ et al.)
+* TopK               — DGC/STC-style magnitude sparsification baseline
+* FCAE               — paper-faithful full fully-connected AE
+* ChunkedAE          — TPU-scale shared-chunk AE (DESIGN.md §3.2)
+* Composed           — AE then latent quantization ("orthogonal add-on", §4.2)
+
+Every compressor reports ``compressed_bytes``/``original_bytes`` so the
+federated runtime can account the savings ratio (paper Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import AEConfig
+from repro.core import autoencoder as ae
+
+Pytree = Any
+
+
+def _nbytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+class Compressor:
+    """Base codec over update pytrees."""
+
+    name = "base"
+
+    def encode(self, update: Pytree) -> Pytree:
+        raise NotImplementedError
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        raise NotImplementedError
+
+    def roundtrip(self, update: Pytree) -> Tuple[Pytree, Dict[str, float]]:
+        flat, unravel = ravel_pytree(update)
+        payload = self.encode(update)
+        decoded = self.decode(payload, unravel)
+        stats = {
+            "original_bytes": float(flat.size * flat.dtype.itemsize),
+            "compressed_bytes": float(_nbytes(payload)),
+        }
+        stats["compression_ratio"] = (
+            stats["original_bytes"] / max(stats["compressed_bytes"], 1.0))
+        return decoded, stats
+
+
+class IdentityCompressor(Compressor):
+    name = "identity"
+
+    def encode(self, update: Pytree) -> Pytree:
+        flat, _ = ravel_pytree(update)
+        return {"flat": flat}
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        return unravel(payload["flat"])
+
+
+@dataclasses.dataclass
+class QuantizeCompressor(Compressor):
+    """Blockwise absmax quantization to int8 (or packed int4)."""
+
+    bits: int = 8
+    block: int = 256
+    name: str = "quantize"
+
+    def __post_init__(self):
+        self.name = f"quantize{self.bits}"
+
+    def encode(self, update: Pytree) -> Pytree:
+        from repro.kernels import ops
+        flat, _ = ravel_pytree(update)
+        q, scales, orig_len = ops.quantize_blocks(flat, bits=self.bits,
+                                                  block=self.block)
+        return {"q": q, "scales": scales,
+                "orig_len": jnp.int32(orig_len)}
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        from repro.kernels import ops
+        flat = ops.dequantize_blocks(payload["q"], payload["scales"],
+                                     bits=self.bits, block=self.block,
+                                     orig_len=int(payload["orig_len"]))
+        return unravel(flat)
+
+
+@dataclasses.dataclass
+class TopKCompressor(Compressor):
+    """Keep the top-k magnitudes (DGC-style); ship (values, int32 indices)."""
+
+    fraction: float = 0.01
+    name: str = "topk"
+
+    def encode(self, update: Pytree) -> Pytree:
+        flat, _ = ravel_pytree(update)
+        k = max(1, int(flat.size * self.fraction))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"values": flat[idx], "indices": idx.astype(jnp.int32),
+                "size": jnp.int32(flat.size)}
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        flat = jnp.zeros((int(payload["size"]),), payload["values"].dtype)
+        flat = flat.at[payload["indices"]].set(payload["values"])
+        return unravel(flat)
+
+
+@dataclasses.dataclass
+class FCAECompressor(Compressor):
+    """Paper-faithful full FC AE: latent = the entire update's encoding."""
+
+    params: Any
+    cfg: AEConfig
+    name: str = "fc_ae"
+
+    def encode(self, update: Pytree) -> Pytree:
+        flat, _ = ravel_pytree(update)
+        pad = self.cfg.input_dim - flat.size
+        assert pad >= 0, (
+            f"AE input_dim {self.cfg.input_dim} < update size {flat.size}")
+        orig = flat.size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        z = ae.fc_encode(self.params, self.cfg, flat)
+        return {"z": z, "orig_len": jnp.int32(orig)}
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        flat = ae.fc_decode(self.params, self.cfg, payload["z"])
+        return unravel(flat[:int(payload["orig_len"])])
+
+
+@dataclasses.dataclass
+class ChunkedAECompressor(Compressor):
+    """Shared-chunk AE (TPU-scale). Uses the Pallas encode/decode kernels when
+    running on TPU; pure-jnp path otherwise."""
+
+    params: Any
+    cfg: ae.ChunkedAEConfig
+    use_kernel: bool = False
+    name: str = "chunked_ae"
+
+    def encode(self, update: Pytree) -> Pytree:
+        flat, _ = ravel_pytree(update)
+        if self.use_kernel:
+            from repro.kernels import ops
+            z = ops.ae_encode(self.params, self.cfg, flat)
+        else:
+            z = ae.chunked_encode(self.params, self.cfg, flat)
+        return {"z": z, "orig_len": jnp.int32(flat.size)}
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        n = int(payload["orig_len"])
+        if self.use_kernel:
+            from repro.kernels import ops
+            flat = ops.ae_decode(self.params, self.cfg, payload["z"], n)
+        else:
+            flat = ae.chunked_decode(self.params, self.cfg, payload["z"], n)
+        return unravel(flat)
+
+
+@dataclasses.dataclass
+class ComposedCompressor(Compressor):
+    """AE latents further quantized — the paper's "orthogonal combination"
+    claim (§4.2) made concrete: ratio multiplies (AE_ratio × 32/bits)."""
+
+    inner: Compressor
+    bits: int = 8
+    block: int = 64
+    name: str = "composed"
+
+    def __post_init__(self):
+        self.name = f"{self.inner.name}+q{self.bits}"
+
+    def encode(self, update: Pytree) -> Pytree:
+        from repro.kernels import ops
+        payload = self.inner.encode(update)
+        z = payload["z"]
+        q, scales, orig = ops.quantize_blocks(z.reshape(-1), bits=self.bits,
+                                              block=self.block)
+        out = dict(payload)
+        out["z_shape"] = jnp.array(z.shape, jnp.int32)
+        out["z"] = q
+        out["z_scales"] = scales
+        out["z_len"] = jnp.int32(orig)
+        return out
+
+    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
+        from repro.kernels import ops
+        z = ops.dequantize_blocks(payload["z"], payload["z_scales"],
+                                  bits=self.bits, block=self.block,
+                                  orig_len=int(payload["z_len"]))
+        inner_payload = {k: v for k, v in payload.items()
+                         if k not in ("z", "z_scales", "z_len", "z_shape")}
+        inner_payload["z"] = z.reshape(tuple(int(s)
+                                             for s in payload["z_shape"]))
+        return self.inner.decode(inner_payload, unravel)

@@ -1,0 +1,122 @@
+"""Pre-pass round (paper §3, Fig. 2).
+
+The server ships the global model; each collaborator trains it locally
+WITHOUT aggregation, logging the flattened weight vector at the end of every
+epoch — the *weights dataset*. That dataset trains the collaborator's AE; the
+decoder half is then shipped to the server (its byte cost is the ``Cost``
+term of the savings-ratio, Eq. 5/6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import AEConfig, ClassifierConfig
+from repro.core import autoencoder as ae
+from repro.models.classifiers import classifier_loss, init_classifier
+from repro.optim.optimizers import make_optimizer
+from repro.data.pipeline import batches
+
+Pytree = Any
+
+
+def local_train(
+    params: Pytree,
+    clf_cfg: ClassifierConfig,
+    data: Dict[str, jnp.ndarray],
+    *,
+    epochs: int,
+    lr: float = 1e-3,
+    batch_size: int = 64,
+    seed: int = 0,
+    optimizer: str = "adam",
+    prox_mu: float = 0.0,
+    anchor: Optional[Pytree] = None,
+    snapshot_every_epoch: bool = False,
+) -> Tuple[Pytree, List[jnp.ndarray], List[Dict[str, float]]]:
+    """Train a classifier locally. Returns (params, weight snapshots,
+    per-epoch metrics). ``prox_mu`` adds the FedProx proximal term against
+    ``anchor`` (the round-start global params)."""
+    opt = make_optimizer(optimizer, lr)
+    state = opt.init(params)
+
+    def loss_fn(p, batch):
+        loss, metrics = classifier_loss(p, clf_cfg, batch)
+        if prox_mu > 0.0 and anchor is not None:
+            sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                jax.tree_util.tree_leaves(p),
+                jax.tree_util.tree_leaves(anchor)))
+            loss = loss + 0.5 * prox_mu * sq
+        return loss, metrics
+
+    @jax.jit
+    def step(p, s, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch)
+        p, s = opt.update(p, grads, s)
+        return p, s, metrics
+
+    snapshots: List[jnp.ndarray] = []
+    history: List[Dict[str, float]] = []
+    for epoch in range(epochs):
+        last_metrics = None
+        for b in batches(seed * 1000 + epoch, data, batch_size):
+            params, state, last_metrics = step(params, state, b)
+        if last_metrics is not None:
+            history.append({k: float(v) for k, v in last_metrics.items()})
+        if snapshot_every_epoch:
+            flat, _ = ravel_pytree(params)
+            snapshots.append(flat)
+    return params, snapshots, history
+
+
+def evaluate(params: Pytree, clf_cfg: ClassifierConfig,
+             data: Dict[str, jnp.ndarray]) -> Dict[str, float]:
+    loss, metrics = jax.jit(
+        lambda p, b: classifier_loss(p, clf_cfg, b))(params, data)
+    return {k: float(v) for k, v in metrics.items()}
+
+
+def run_prepass(
+    rng: jax.Array,
+    clf_cfg: ClassifierConfig,
+    ae_cfg: AEConfig,
+    data: Dict[str, jnp.ndarray],
+    *,
+    prepass_epochs: int = 30,
+    ae_epochs: int = 150,
+    lr: float = 1e-3,
+    seed: int = 0,
+    collect_updates: bool = False,
+) -> Dict[str, Any]:
+    """Full pre-pass for one collaborator: local training → weights dataset →
+    AE training. ``collect_updates=True`` stores per-epoch *deltas* from the
+    initial weights instead of raw weights (the FL-mode codec target)."""
+    k_model, k_ae = jax.random.split(rng)
+    params0 = init_classifier(k_model, clf_cfg)
+    flat0, _ = ravel_pytree(params0)
+
+    params, snaps, history = local_train(
+        params0, clf_cfg, data, epochs=prepass_epochs, lr=lr, seed=seed,
+        snapshot_every_epoch=True)
+    dataset = jnp.stack(snaps)                       # (E, P)
+    if collect_updates:
+        dataset = dataset - flat0[None, :]
+    pad = ae_cfg.input_dim - dataset.shape[1]
+    assert pad >= 0, "AE input smaller than model parameter count"
+    if pad:
+        dataset = jnp.pad(dataset, ((0, 0), (0, pad)))
+
+    ae_params, ae_history = ae.train_autoencoder(
+        k_ae, ae_cfg, dataset, kind="fc", epochs=ae_epochs)
+    return {
+        "model_params": params,
+        "weights_dataset": dataset,
+        "ae_params": ae_params,
+        "ae_history": ae_history,
+        "train_history": history,
+        "decoder_params": ae.decoder_param_count(ae_params),
+    }

@@ -1,0 +1,76 @@
+"""Savings-ratio analytics (paper §5.3, Eq. 4–6) and break-even points.
+
+SR = (OriginalSize * CommRounds * Collabs)
+     / (CompressedSize * CommRounds * Collabs + Cost),          (Eq. 4)
+Cost = DecoderSize * NumDecoders = (AutoencoderSize / 2) * NumDecoders.
+                                                              (Eq. 5/6)
+Sizes are in parameter counts (the paper's unit); bytes scale both sides
+equally so the ratio is unit-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SavingsModel:
+    original_size: int          # collaborator update size (params)
+    compressed_size: int        # latent size (params)
+    autoencoder_size: int       # total AE params (decoder = half)
+    n_decoders: int = 1         # 1 = shared decoder (case a); C = per-collab
+
+    @property
+    def decoder_size(self) -> float:
+        return self.autoencoder_size / 2.0                       # Eq. 6
+
+    @property
+    def cost(self) -> float:
+        return self.decoder_size * self.n_decoders               # Eq. 5
+
+    def savings_ratio(self, comm_rounds: int, collabs: int) -> float:
+        num = self.original_size * comm_rounds * collabs          # Eq. 4
+        den = self.compressed_size * comm_rounds * collabs + self.cost
+        return num / den
+
+    def break_even_collabs(self, comm_rounds: int,
+                           max_collabs: int = 10 ** 7) -> Optional[int]:
+        """Smallest collaborator count with SR > 1 (Fig. 10 break-even)."""
+        lo, hi = 1, max_collabs
+        if self.savings_ratio(comm_rounds, hi) <= 1.0:
+            return None
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.savings_ratio(comm_rounds, mid) > 1.0:
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
+
+    def break_even_rounds(self, collabs: int,
+                          max_rounds: int = 10 ** 7) -> Optional[int]:
+        """Smallest round count with SR > 1 (Fig. 11 break-even)."""
+        lo, hi = 1, max_rounds
+        if self.savings_ratio(hi, collabs) <= 1.0:
+            return None
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.savings_ratio(mid, collabs) > 1.0:
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
+
+    def asymptotic_ratio(self) -> float:
+        """SR as rounds*collabs → ∞ = raw compression ratio."""
+        return self.original_size / self.compressed_size
+
+
+def sweep_collaborators(model: SavingsModel, comm_rounds: int,
+                        collabs: List[int]) -> List[float]:
+    return [model.savings_ratio(comm_rounds, c) for c in collabs]
+
+
+def sweep_rounds(model: SavingsModel, collabs: int,
+                 rounds: List[int]) -> List[float]:
+    return [model.savings_ratio(r, collabs) for r in rounds]

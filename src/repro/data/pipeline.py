@@ -1,0 +1,131 @@
+"""Deterministic synthetic data pipeline.
+
+The container is offline, so the paper's MNIST/CIFAR datasets are replaced by
+synthetic classification tasks with identical tensor shapes and class counts
+(DESIGN.md §3, "assumption changes"). Class structure: each class is a random
+gaussian cluster in input space plus per-sample noise — learnable to high
+accuracy by the paper's tiny models, which is what the repro needs (the claim
+under test concerns the *weights* dataset, not the image dataset).
+
+Also provides:
+* the paper's 2-collaborator **color/grayscale imbalance** split (§5.2),
+* **Dirichlet non-IID label partitioning** for larger federations,
+* a token-stream sampler for the LLM training driver.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_classification(
+    seed: int, n: int, input_shape: Tuple[int, ...], n_classes: int,
+    *, sep: float = 3.0, noise: float = 1.0,
+) -> Dict[str, jnp.ndarray]:
+    """Gaussian-cluster classification with deterministic structure."""
+    rng = np.random.RandomState(seed)
+    dim = int(np.prod(input_shape))
+    centers = rng.randn(n_classes, dim).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    y = rng.randint(0, n_classes, size=n).astype(np.int32)
+    x = centers[y] * sep + rng.randn(n, dim).astype(np.float32) * noise
+    x = x.reshape(n, *input_shape)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def mnist_like(seed: int, n: int = 2048) -> Dict[str, jnp.ndarray]:
+    # sep chosen so the task generalizes from a few hundred samples (the
+    # per-dim noise norm is sqrt(784)≈28; class structure must dominate it)
+    return synthetic_classification(seed, n, (784,), 10, sep=8.0, noise=0.7)
+
+
+def cifar_like(seed: int, n: int = 2048) -> Dict[str, jnp.ndarray]:
+    return synthetic_classification(seed, n, (32, 32, 3), 10,
+                                    sep=8.0, noise=0.7)
+
+
+def to_grayscale(data: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Paper §5.2: the second collaborator sees grayscale images (channel
+    mean replicated) — the color-imbalance non-IID condition."""
+    x = data["x"]
+    assert x.ndim == 4, "grayscale imbalance needs HWC images"
+    g = jnp.mean(x, axis=-1, keepdims=True)
+    return {"x": jnp.broadcast_to(g, x.shape), "y": data["y"]}
+
+
+def color_imbalance_split(seed: int, n_per_collab: int = 2048,
+                          n_eval: int = 256
+                          ) -> Tuple[List[Dict[str, jnp.ndarray]],
+                                     Dict[str, jnp.ndarray]]:
+    """Two CIFAR-like collaborators over ONE underlying task (same class
+    centers): collaborator 0 sees color images, collaborator 1 the grayscale
+    version of a disjoint slice (paper §5.2). Returns ([c0, c1], eval)."""
+    data = cifar_like(seed, 2 * n_per_collab + n_eval)
+    c0 = {k: v[:n_per_collab] for k, v in data.items()}
+    c1 = to_grayscale({k: v[n_per_collab:2 * n_per_collab]
+                       for k, v in data.items()})
+    evald = {k: v[2 * n_per_collab:] for k, v in data.items()}
+    return [c0, c1], evald
+
+
+def train_eval_split(data: Dict[str, jnp.ndarray], n_eval: int
+                     ) -> Tuple[Dict[str, jnp.ndarray],
+                                Dict[str, jnp.ndarray]]:
+    """Split one dataset into train/eval — eval MUST share the generating
+    seed (class centers) with train; a different-seed dataset is a different
+    task."""
+    n = data["x"].shape[0]
+    assert n_eval < n
+    train = {k: v[:n - n_eval] for k, v in data.items()}
+    evald = {k: v[n - n_eval:] for k, v in data.items()}
+    return train, evald
+
+
+def dirichlet_partition(seed: int, data: Dict[str, jnp.ndarray],
+                        n_clients: int, alpha: float = 0.5
+                        ) -> List[Dict[str, jnp.ndarray]]:
+    """Label-skew non-IID partition (standard FL benchmark protocol)."""
+    rng = np.random.RandomState(seed)
+    y = np.asarray(data["y"])
+    n_classes = int(y.max()) + 1
+    client_idx: List[List[int]] = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.where(y == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for ci, part in enumerate(np.split(idx, cuts)):
+            client_idx[ci].extend(part.tolist())
+    out = []
+    for ci in range(n_clients):
+        sel = np.array(sorted(client_idx[ci]), dtype=np.int64)
+        if len(sel) == 0:            # give empty clients one sample
+            sel = np.array([ci % len(y)])
+        out.append({"x": data["x"][sel], "y": data["y"][sel]})
+    return out
+
+
+def batches(seed: int, data: Dict[str, jnp.ndarray], batch_size: int
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """One epoch of shuffled minibatches."""
+    n = data["x"].shape[0]
+    rng = np.random.RandomState(seed)
+    order = rng.permutation(n)
+    for i in range(0, n - batch_size + 1, batch_size):
+        sel = order[i:i + batch_size]
+        yield {"x": data["x"][sel], "y": data["y"][sel]}
+
+
+# ----------------------------------------------------------------- LM stream
+def synthetic_lm_batch(seed: int, vocab_size: int, batch: int,
+                       seq_len: int) -> Dict[str, jnp.ndarray]:
+    """Zipf-distributed token stream with next-token labels — a deterministic
+    stand-in corpus for the LLM training driver."""
+    rng = np.random.RandomState(seed)
+    ranks = rng.zipf(1.3, size=(batch, seq_len + 1))
+    tokens = (ranks % vocab_size).astype(np.int32)
+    return {"tokens": jnp.asarray(tokens[:, :-1]),
+            "labels": jnp.asarray(tokens[:, 1:])}

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused flash attention (forward).
+
+This is the TPU-native counterpart of ``models/attention.flash_attention``
+(the pure-JAX scan the dry-run lowers): the online-softmax (m, l, acc)
+recurrence runs entirely in VMEM scratch, so the (q_block × kv_block) score
+and probability tiles NEVER touch HBM — the basis of the roofline's
+``memory_fused`` term (roofline/analysis.py).
+
+Grid: (batch, q_heads, Sq/q_block, Skv/kv_block), kv innermost ("reduction"
+axis). Per-step VMEM: q tile (qb, D) + k/v tiles (kb, D) + f32 scratch
+acc (qb, D) / m (qb,) / l (qb,) ≈ 0.4 MB at 128-square tiles — far under the
+~16 MB/core budget, and all matmul dims are multiples of the 128-wide MXU.
+GQA is handled in the index maps: kv tiles are indexed by h // group_size,
+so no K/V head replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, mode: str, window: Optional[int],
+                  q_block: int, kv_block: int, kv_len: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)      # (qb, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (kb, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (kb, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_ids = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 0)
+    k_ids = kj * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (q_block, kv_block), 1)
+    mask = k_ids < kv_len                          # kv padding
+    if mode in ("causal", "window"):
+        mask &= k_ids <= q_ids
+    if mode == "window":
+        mask &= k_ids > q_ids - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (qb,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,                  # (B, Sq, H, D)
+    k: jax.Array,                  # (B, Skv, KV, D)
+    v: jax.Array,                  # (B, Skv, KV, D)
+    *,
+    mode: str = "causal",
+    window: Optional[int] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, Dv = v.shape
+    G = H // KV
+    scale = D ** -0.5
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    sq_p = -(-Sq // q_block) * q_block
+    sk_p = -(-Skv // kv_block) * kv_block
+    if sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    if sk_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - Skv), (0, 0), (0, 0)))
+
+    grid = (B, H, sq_p // q_block, sk_p // kv_block)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, mode=mode,
+                          window=window, q_block=q_block,
+                          kv_block=kv_block, kv_len=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, D),
+                         lambda b, h, qi, kj: (b, qi, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, qi, kj, G=G: (b, kj, h // G, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, qi, kj, G=G: (b, kj, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, D),
+                               lambda b, h, qi, kj: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, sq_p, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

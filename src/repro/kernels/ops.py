@@ -1,0 +1,76 @@
+"""Dispatch layer over the Pallas kernels.
+
+On TPU the compiled kernels run natively; everywhere else (this CPU
+container, unit tests) they execute with ``interpret=True`` so the *same
+kernel bodies* are validated against the ``ref.py`` oracles. ``bits=4``
+payloads are packed two-nibbles-per-byte here (packing is a reshape+or — not
+worth a kernel).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autoencoder import ChunkedAEConfig, chunk_vector
+from repro.kernels.fused_dense import fused_dense
+from repro.kernels.quantize import dequantize_blocks_2d, quantize_blocks_2d
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- quantize
+def quantize_blocks(flat: jax.Array, *, bits: int = 8,
+                    block: int = 256) -> Tuple[jax.Array, jax.Array, int]:
+    """flat f32 vector → (payload int8, scales f32, orig_len). bits=4 packs
+    two values per byte."""
+    orig_len = int(flat.size)
+    blocks, _ = chunk_vector(flat.astype(jnp.float32), block)
+    q, scales = quantize_blocks_2d(blocks, bits=bits, block=block,
+                                   interpret=_interpret())
+    if bits == 4:
+        qf = q.reshape(-1)
+        lo = (qf[0::2] + 8).astype(jnp.uint8)       # [-7,7] → [1,15]
+        hi = (qf[1::2] + 8).astype(jnp.uint8)
+        q = (lo | (hi << 4)).astype(jnp.uint8)
+    return q, scales, orig_len
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *, bits: int = 8,
+                      block: int = 256, orig_len: int = 0) -> jax.Array:
+    if bits == 4:
+        lo = (q & 0xF).astype(jnp.int8) - 8
+        hi = ((q >> 4) & 0xF).astype(jnp.int8) - 8
+        flatq = jnp.stack([lo, hi], axis=-1).reshape(-1)
+        q = flatq.reshape(-1, block)
+    x = dequantize_blocks_2d(q, scales, block=block, interpret=_interpret())
+    flat = x.reshape(-1)
+    return flat[:orig_len] if orig_len else flat
+
+
+# ---------------------------------------------------------------- chunked AE
+def _stack_forward(stack, x: jax.Array, act: str, final_act: str) -> jax.Array:
+    interp = _interpret()
+    for i, layer in enumerate(stack):
+        a = act if i < len(stack) - 1 else final_act
+        x = fused_dense(x, layer["w"], layer["b"], act=a, interpret=interp)
+    return x
+
+
+def ae_encode(params, cfg: ChunkedAEConfig, flat: jax.Array) -> jax.Array:
+    """Kernel-backed chunked encode: (n_chunks, chunk) → (n_chunks, latent)."""
+    chunks, _ = chunk_vector(flat, cfg.chunk_size)
+    norm = params["norm"]
+    xn = (chunks - norm["mean"]) / norm["std"]
+    return _stack_forward(params["enc"], xn, cfg.activation, cfg.activation)
+
+
+def ae_decode(params, cfg: ChunkedAEConfig, z: jax.Array,
+              orig_len: int) -> jax.Array:
+    xn = _stack_forward(params["dec"], z, cfg.activation, "linear")
+    norm = params["norm"]
+    chunks = xn * norm["std"] + norm["mean"]
+    return chunks.reshape(-1)[:orig_len]

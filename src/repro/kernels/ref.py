@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_dense_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                    act: str = "relu") -> jax.Array:
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif act != "linear":
+        raise ValueError(act)
+    return y.astype(x.dtype)
+
+
+def quantize_blocks_ref(x: jax.Array, bits: int = 8):
+    """x: (n_blocks, block) → (q int8, scales f32 (n_blocks,))."""
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def dequantize_blocks_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scales[:, None]
+
+
+def ae_encode_ref(params, cfg, flat: jax.Array) -> jax.Array:
+    from repro.core import autoencoder as ae
+    return ae.chunked_encode(params, cfg, flat)
+
+
+def ae_decode_ref(params, cfg, z: jax.Array, orig_len: int) -> jax.Array:
+    from repro.core import autoencoder as ae
+    return ae.chunked_decode(params, cfg, z, orig_len)

@@ -1,0 +1,262 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape).
+
+``build_step(cfg, shape, mesh)`` returns a ``StepBundle``: the jit-able step
+function, its example-input ShapeDtypeStructs (no device allocation — the
+shannon/kernels dry-run pattern), and in/out shardings. The dry-run lowers
+and compiles exactly these bundles; the real launchers execute them.
+
+Step kinds by shape.mode:
+* train   — fused loss/grad/optimizer update (donated params+opt state)
+* prefill — full-sequence forward returning (last logits, decode cache)
+* decode  — one-token serve step against a pre-filled KV/state cache
+* fl      — federated round: local update + chunked-AE compressed exchange
+            across the ``pod`` axis (the paper's technique; multi-pod mesh)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.models import sharding as shard_lib
+from repro.optim.optimizers import make_optimizer
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: Tuple[Pytree, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Pytree, ...]
+    out_shardings: Pytree
+    donate_argnums: Tuple[int, ...] = ()
+    static_broadcasted: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ArchConfig) -> Pytree:
+    return jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig,
+                 with_labels: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.encdec.n_frames, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((B, cfg.vlm.n_image_tokens, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def decode_window(cfg: ArchConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding-window fallback for quadratic archs on very long contexts."""
+    if shape.name == "long_500k" and cfg.long_context_window:
+        return cfg.long_context_window
+    return None
+
+
+def cache_shapes(cfg: ArchConfig, shape: ShapeConfig) -> Pytree:
+    window = decode_window(cfg, shape)
+    return jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg,
+                          shape.global_batch, shape.seq_len, window))
+
+
+# =====================================================================
+# sharding assembly
+# =====================================================================
+def _opt_specs(cfg: ArchConfig, mesh: Mesh, p_specs: Pytree,
+               p_shapes: Pytree, opt_state_shape: Pytree) -> Pytree:
+    """Optimizer state specs: moments follow params (+ZeRO-1 data sharding)."""
+    def moment_spec(spec, shp):
+        return shard_lib.zero1_spec(spec, shp.shape, mesh) if cfg.zero1 \
+            else spec
+    moment = jax.tree_util.tree_map(moment_spec, p_specs, p_shapes)
+    out = {}
+    for k, v in opt_state_shape.items():
+        if k == "count":
+            out[k] = P()
+        else:
+            out[k] = moment
+    return out
+
+
+def _activation_axes(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(batch_axes, seq_axis) for residual-stream sharding constraints.
+
+    batch over (pod, data) when divisible; sequence over `model` for
+    full-sequence modes on attention-bearing archs (§Perf iteration 2:
+    fractional-head sharding otherwise makes GSPMD split the attention
+    contraction dim, inserting per-tile all-reduces inside the flash loop).
+    SSM/hybrid keep 1D sharding — their scans run along the sequence.
+    """
+    axes = shard_lib.batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if shape.global_batch % total != 0:
+        return None, None
+    seq_axis = None
+    seq_ok = (cfg.family in ("dense", "moe", "vlm", "audio")
+              and shape.seq_len % mesh.shape.get("model", 1) == 0)
+    if seq_ok and (shape.mode == "prefill"
+                   or (shape.mode == "train" and cfg.train_seq_shard)):
+        seq_axis = "model"
+    return axes, seq_axis
+
+
+def _with_activation_ctx(fn, axes, seq_axis=None):
+    if axes is None:
+        return fn
+    from repro.models.partition_ctx import activation_sharding
+
+    def wrapped(*a):
+        with activation_sharding(axes, seq_axis):
+            return fn(*a)
+    return wrapped
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               fl: bool = False, constrain: bool = True) -> StepBundle:
+    if shape.mode == "train":
+        if fl:
+            from repro.core.distributed import build_fl_round_step
+            bundle = build_fl_round_step(cfg, shape, mesh)
+        else:
+            bundle = build_train_step(cfg, shape, mesh)
+    elif shape.mode == "prefill":
+        bundle = build_prefill_step(cfg, shape, mesh)
+    elif shape.mode == "decode":
+        bundle = build_decode_step(cfg, shape, mesh)
+    else:
+        raise ValueError(shape.mode)
+    if constrain:
+        axes, seq_axis = _activation_axes(cfg, shape, mesh)
+        if fl and axes is not None:
+            # inside the FL step the pod axis is Manual (shard_map) — the
+            # residual-stream constraint may only name the auto axes
+            axes = tuple(a for a in axes if a != "pod") or None
+        bundle.fn = _with_activation_ctx(bundle.fn, axes, seq_axis)
+    return bundle
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig,
+                     mesh: Mesh) -> StepBundle:
+    opt = make_optimizer(cfg.optimizer, cfg.learning_rate,
+                         weight_decay=cfg.weight_decay,
+                         grad_clip=cfg.grad_clip)
+
+    def step(params, opt_state, batch):
+        if cfg.grad_reduce_dtype == "bfloat16":
+            # differentiate w.r.t. a bf16 view so the weight-gradient
+            # all-reduces (data axis + sequence-parallel groups) move half
+            # the bytes; the optimizer still applies f32 master updates
+            cast_p = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+            (_, metrics), grads = jax.value_and_grad(
+                model_lib.train_loss, has_aux=True)(cast_p, cfg, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g.astype(p.dtype), grads, params)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                model_lib.train_loss, has_aux=True)(params, cfg, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": metrics["loss"],
+                                   "accuracy": metrics["accuracy"]}
+
+    p_shapes = param_shapes(cfg)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    b_shapes = batch_shapes(cfg, shape)
+
+    p_specs = shard_lib.param_specs(p_shapes, mesh)
+    o_specs = _opt_specs(cfg, mesh, p_specs, p_shapes, o_shapes)
+    b_specs = shard_lib.batch_specs(b_shapes, mesh)
+    metric_specs = {"loss": P(), "accuracy": P()}
+
+    return StepBundle(
+        name=f"train:{cfg.name}:{shape.name}",
+        fn=step,
+        args=(p_shapes, o_shapes, b_shapes),
+        in_shardings=(p_specs, o_specs, b_specs),
+        out_shardings=(p_specs, o_specs, metric_specs),
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig,
+                       mesh: Mesh, two_d_weights: bool = True) -> StepBundle:
+    window = decode_window(cfg, shape)
+
+    def step(params, batch):
+        return model_lib.prefill(params, cfg, batch,
+                                 cache_len=shape.seq_len, window=window)
+
+    p_shapes = param_shapes(cfg)
+    b_shapes = batch_shapes(cfg, shape, with_labels=False)
+    c_shapes = jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, window))
+    # prefill cache has index set — same structure as init_cache
+    p_specs = shard_lib.param_specs(p_shapes, mesh)
+    if two_d_weights:
+        p_specs = shard_lib.fully_shard(p_specs, p_shapes, mesh)
+    b_specs = shard_lib.batch_specs(b_shapes, mesh)
+    c_specs = shard_lib.cache_specs(c_shapes, mesh)
+    logits_spec = shard_lib.data_spec(mesh, shape.global_batch, 2)
+
+    return StepBundle(
+        name=f"prefill:{cfg.name}:{shape.name}",
+        fn=step,
+        args=(p_shapes, b_shapes),
+        in_shardings=(p_specs, b_specs),
+        out_shardings=(logits_spec, c_specs),
+    )
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig,
+                      mesh: Mesh, two_d_weights: bool = True) -> StepBundle:
+    window = decode_window(cfg, shape)
+
+    def step(params, cache, token):
+        return model_lib.decode_step(params, cfg, token, cache,
+                                     window=window)
+
+    p_shapes = param_shapes(cfg)
+    c_shapes = cache_shapes(cfg, shape)
+    t_shape = _sds((shape.global_batch, 1), jnp.int32)
+
+    p_specs = shard_lib.param_specs(p_shapes, mesh)
+    if two_d_weights:
+        p_specs = shard_lib.fully_shard(p_specs, p_shapes, mesh)
+    c_specs = shard_lib.cache_specs(c_shapes, mesh)
+    t_spec = shard_lib.data_spec(mesh, shape.global_batch, 2)
+    logits_spec = shard_lib.data_spec(mesh, shape.global_batch, 2)
+
+    return StepBundle(
+        name=f"decode:{cfg.name}:{shape.name}",
+        fn=step,
+        args=(p_shapes, c_shapes, t_shape),
+        in_shardings=(p_specs, c_specs, t_spec),
+        out_shardings=(logits_spec, c_specs),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,381 @@
+"""Attention family: GQA (full / sliding-window / bidirectional / cross) and
+MLA (multi-head latent attention), with flash-style chunked computation for
+long sequences and KV-cache support for serving.
+
+Memory design: full-sequence attention never materializes the (Sq, Skv)
+matrix. ``flash_attention`` scans over query chunks and, inside, over KV
+chunks with an online-softmax (m, l, acc) carry — the standard
+FlashAttention-2 recurrence expressed in pure JAX (the TPU-kernel version of
+this loop is what a fused Pallas attention kernel would implement; on this
+framework the XLA scan already bounds live memory to one (q_chunk × kv_chunk)
+tile per step, which is what the dry-run memory analysis needs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import apply_norm, apply_rope, cast, dense_init, \
+    init_norm, masked_softmax, pdt
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# =====================================================================
+# Flash-style chunked attention (training / prefill)
+# =====================================================================
+def flash_attention(
+    q: jax.Array,                 # (B, Sq, H, D)
+    k: jax.Array,                 # (B, Skv, KV, D)
+    v: jax.Array,                 # (B, Skv, KV, Dv)
+    *,
+    mode: str = "causal",         # causal | window | full
+    q_offset: int = 0,            # absolute position of q[0] among kv
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    extra_qk: Optional[Tuple[jax.Array, jax.Array]] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """``extra_qk=(q2 (B,Sq,H,P2), k2 (B,Skv,P2))`` adds a second,
+    head-shared score term — the decomposed MLA formulation: rope scores are
+    computed against the single shared rope key instead of broadcasting it
+    into every head's K (saves (B,S,H,rope) bytes of K materialization)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, Dv = v.shape
+    G = H // KV
+    if scale is None:
+        scale = D ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq, nk = _cdiv(Sq, q_chunk), _cdiv(Skv, kv_chunk)
+    q_pad, kv_pad = nq * q_chunk - Sq, nk * kv_chunk - Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+
+    # (nq, B, qc, KV, G, D) query blocks / (nk, B, kc, KV, D) kv blocks
+    qb = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+    if extra_qk is not None:
+        q2, k2 = extra_qk
+        P2 = q2.shape[-1]
+        if q_pad:
+            q2 = jnp.pad(q2, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        if kv_pad:
+            k2 = jnp.pad(k2, ((0, 0), (0, kv_pad), (0, 0)))
+        q2b = q2.reshape(B, nq, q_chunk, KV, G, P2).transpose(
+            1, 0, 2, 3, 4, 5)
+        k2b = k2.reshape(B, nk, kv_chunk, P2).transpose(1, 0, 2, 3)
+    else:
+        q2b = jnp.zeros((nq,), q.dtype)          # placeholder leaves
+        k2b = jnp.zeros((nk,), q.dtype)
+
+    def mask_block(qi: jax.Array, kj: jax.Array) -> jax.Array:
+        """(qc, kc) bool mask for query block qi vs kv block kj."""
+        q_ids = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+        k_ids = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        valid = k_ids < Skv                      # kv padding
+        if mode == "full":
+            return valid
+        m = k_ids <= q_ids
+        if mode == "window":
+            m &= k_ids > q_ids - window
+        return m & valid
+
+    def q_block_attend(args):
+        qi_idx, q_blk, q2_blk = args              # q_blk: (B, qc, KV, G, D)
+
+        def kv_step(carry, args2):
+            m_run, l_run, acc = carry
+            kj_idx, k_blk, v_blk, k2_blk = args2
+            # scores: (B, KV, G, qc, kc)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32))
+            if extra_qk is not None:
+                s = s + jnp.einsum("bqkgp,bsp->bkgqs",
+                                   q2_blk.astype(jnp.float32),
+                                   k2_blk.astype(jnp.float32))
+            s = s * scale
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            msk = mask_block(qi_idx, kj_idx)      # (qc, kc)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p,
+                            v_blk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, Dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb, k2b))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        # (B, KV, G, qc, Dv) -> (B, qc, KV, G, Dv)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    out = jax.lax.map(q_block_attend, (jnp.arange(nq), qb, q2b))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# =====================================================================
+# Single-token decode attention against a (possibly ring) cache
+# =====================================================================
+def decode_attention(
+    q: jax.Array,                  # (B, 1, H, D)
+    k_cache: jax.Array,            # (B, S, KV, D)
+    v_cache: jax.Array,            # (B, S, KV, Dv)
+    *,
+    index: jax.Array,              # scalar int32: current absolute position
+    positions: Optional[jax.Array] = None,   # (B, S) for ring caches
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, KV, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = q.shape[-1] ** -0.5
+    qg = q.reshape(B, KV, G, q.shape[-1])
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if positions is None:
+        pos = jnp.arange(S)[None, :]                       # (1, S)
+    else:
+        pos = positions                                    # (B, S)
+    mask = (pos <= index) & (pos >= 0)
+    if window is not None:
+        mask &= pos > index - window
+    p = masked_softmax(s, mask[:, None, None, :], softcap)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# =====================================================================
+# GQA module
+# =====================================================================
+def init_gqa(key: jax.Array, cfg: ArchConfig, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    dtype = pdt(cfg)
+    q_dim = cfg.n_heads * cfg.head_dim
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, kv_dim, dtype),
+        "wo": dense_init(ks[3], q_dim, cfg.d_model, dtype,
+                         scale=q_dim ** -0.5),
+    }
+
+
+def gqa_project_kv(p: dict, x: jax.Array, cfg: ArchConfig,
+                   positions: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """K/V projection (+rope on K). Used by forward, prefill and cross-attn."""
+    B, S, _ = x.shape
+    k = (x @ cast(p["wk"], cfg)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ cast(p["wv"], cfg)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.rope_theta > 0 and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    return k, v
+
+
+def gqa_forward(
+    p: dict,
+    x: jax.Array,                          # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,  # (B, S) absolute positions
+    mode: str = "causal",
+    window: Optional[int] = None,
+    kv_x: Optional[jax.Array] = None,       # cross-attention source
+    kv_positions: Optional[jax.Array] = None,
+    cached_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out, (k, v)) so prefill can build the cache and cross-attention
+    can reuse projected encoder KV.
+    """
+    B, S, _ = x.shape
+    q = (x @ cast(p["wq"], cfg)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if cfg.rope_theta > 0 and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+    if cached_kv is not None:
+        k, v = cached_kv
+    else:
+        src = x if kv_x is None else kv_x
+        pos = positions if kv_x is None else kv_positions
+        k, v = gqa_project_kv(p, src, cfg, pos)
+    out = flash_attention(q, k, v, mode=mode, window=window,
+                          softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ cast(p["wo"], cfg), (k, v)
+
+
+def gqa_decode(
+    p: dict,
+    x: jax.Array,                          # (B, 1, D)
+    cfg: ArchConfig,
+    cache: dict,                           # {"k","v"[, "pos"]}
+    index: jax.Array,                      # scalar int32 absolute position
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, dict]:
+    """One-token decode: write the new KV into the cache (ring buffer when the
+    cache is window-sized) and attend over it."""
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(index, (B,))
+    q = (x @ cast(p["wq"], cfg)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k_new, v_new = gqa_project_kv(p, x, cfg, pos_b[:, None])
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos_b[:, None], cfg.rope_theta, cfg.rope_pct)
+
+    S = cache["k"].shape[1]
+    slot = index % S                                   # ring when S < index
+    k_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = dict(cache, k=k_c, v=v_c)
+    positions = None
+    if "pos" in cache:
+        pos_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(index, (B, 1)).astype(jnp.int32),
+            slot, axis=1)
+        new_cache["pos"] = pos_c
+        positions = pos_c
+    out = decode_attention(q, k_c, v_c, index=index, positions=positions,
+                           window=window, softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return out @ cast(p["wo"], cfg), new_cache
+
+
+# =====================================================================
+# MLA (Multi-head Latent Attention) — MiniCPM3 / DeepSeek-V2 style
+# =====================================================================
+def init_mla(key: jax.Array, cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    dtype = pdt(cfg)
+    H = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": init_norm(cfg, m.q_lora_rank),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, H * qk_dim, dtype),
+        # joint down-projection: [c_kv | k_rope]
+        "w_dkv": dense_init(ks[2], cfg.d_model,
+                            m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": init_norm(cfg, m.kv_lora_rank),
+        # up-projections stored (rank, H, dim) for the absorbed decode path
+        "w_uk": (dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim,
+                            dtype).reshape(m.kv_lora_rank, H,
+                                           m.qk_nope_head_dim)),
+        "w_uv": (dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim,
+                            dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)),
+        "wo": dense_init(ks[5], H * m.v_head_dim, cfg.d_model,
+                         scale=(H * m.v_head_dim) ** -0.5, dtype=dtype),
+    }
+
+
+def _mla_q(p: dict, x: jax.Array, cfg: ArchConfig,
+           positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = apply_norm(p["q_norm"], x @ cast(p["w_dq"], cfg), cfg)
+    q = (q_lat @ cast(p["w_uq"], cfg)).reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p: dict, x: jax.Array, cfg: ArchConfig,
+                   positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    dkv = x @ cast(p["w_dkv"], cfg)
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm(p["kv_norm"], c_kv, cfg)         # (B, S, r)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                # (B, S, 1, rope_d)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p: dict, x: jax.Array, cfg: ArchConfig, *,
+                positions: jax.Array, mode: str = "causal",
+                window: Optional[int] = None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence MLA (train / prefill): expand the latent to per-head K/V
+    and run chunked attention. Returns (out, (c_kv, k_rope)) for caching."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_kv_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, cast(p["w_uk"], cfg))
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, cast(p["w_uv"], cfg))
+    # NOTE(§Perf, refuted): the decomposed-score formulation
+    # (extra_qk=(q_rope, k_rope), no K broadcast) measured 2.3x MORE
+    # collective bytes under sequence-sharded GSPMD — the head-shared rope
+    # key forces per-q-block regathers. The concat form keeps rope inside
+    # the per-head K stream, which shards cleanly. See EXPERIMENTS.md §Perf.
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    out = flash_attention(q, k, v, mode=mode, window=window)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return out @ cast(p["wo"], cfg), (c_kv, k_rope)
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ArchConfig, cache: dict,
+               index: jax.Array) -> Tuple[jax.Array, dict]:
+    """Absorbed-matrix MLA decode: attention runs directly in the latent
+    space, so the cache is only (B, S, r) + (B, S, rope_d) — the MLA memory
+    win — and no per-step K/V expansion of the full history is needed."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos_b = jnp.broadcast_to(index, (B,))[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, pos_b)          # (B,1,H,*)
+    c_new, kr_new = _mla_kv_latent(p, x, cfg, pos_b)   # (B,1,r), (B,1,rope)
+
+    S = cache["c_kv"].shape[1]
+    slot = index % S
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), slot, axis=1)
+    new_cache = dict(cache, c_kv=c_kv, k_rope=k_rope)
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    # absorb W_uk into q: (B,1,H,r)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, cast(p["w_uk"], cfg))
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32),
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    mask = (jnp.arange(S) <= index)[None, None, None, :]
+    probs = masked_softmax(s, mask)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(x.dtype),
+                     cast(p["w_uv"], cfg))
+    out = out.reshape(B, 1, H * m.v_head_dim)
+    return out @ cast(p["wo"], cfg), new_cache

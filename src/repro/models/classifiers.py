@@ -1,0 +1,108 @@
+"""The paper's collaborator models (§4.1) in pure JAX.
+
+MNIST-MLP: 784→20→10, exactly 15,910 parameters (paper §5.1).
+CIFAR-CNN: 4 conv layers + 3 dense, ≈550,586 parameters (paper: 550,570).
+
+These are the models whose *weight updates* the autoencoder compresses; they
+are deliberately small and Keras-like to match the paper's experimental setup.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import ClassifierConfig
+
+Params = Dict[str, Any]
+
+
+def _dense(key, d_in, d_out):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (d_in ** -0.5)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _conv(key, c_in, c_out, k):
+    fan_in = c_in * k * k
+    w = jax.random.normal(key, (k, k, c_in, c_out),
+                          jnp.float32) * (fan_in ** -0.5)
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def init_classifier(rng: jax.Array, cfg: ClassifierConfig) -> Params:
+    if cfg.kind == "mlp":
+        dims = [cfg.input_shape[0], *cfg.hidden, cfg.n_classes]
+        keys = jax.random.split(rng, len(dims) - 1)
+        return {f"dense{i}": _dense(k, dims[i], dims[i + 1])
+                for i, k in enumerate(keys)}
+    # cnn: conv stack (maxpool every 2 convs) then dense head
+    keys = jax.random.split(rng, len(cfg.conv_channels)
+                            + len(cfg.dense_hidden) + 1)
+    params: Params = {}
+    c_in = cfg.input_shape[-1]
+    for i, c_out in enumerate(cfg.conv_channels):
+        params[f"conv{i}"] = _conv(keys[i], c_in, c_out, cfg.conv_kernel)
+        c_in = c_out
+    flat_dim = _cnn_flat_dim(cfg)
+    dims = [flat_dim, *cfg.dense_hidden, cfg.n_classes]
+    for i in range(len(dims) - 1):
+        params[f"dense{i}"] = _dense(keys[len(cfg.conv_channels) + i],
+                                     dims[i], dims[i + 1])
+    return params
+
+
+def _cnn_flat_dim(cfg: ClassifierConfig) -> int:
+    h = w = cfg.input_shape[0]
+    for i in range(len(cfg.conv_channels)):
+        h, w = h - cfg.conv_kernel + 1, w - cfg.conv_kernel + 1   # VALID conv
+        if i % 2 == 1:                                            # pool 2x2
+            h, w = h // 2, w // 2
+    return h * w * cfg.conv_channels[-1]
+
+
+def apply_classifier(params: Params, cfg: ClassifierConfig,
+                     x: jax.Array) -> jax.Array:
+    """x: (B, *input_shape) → logits (B, n_classes)."""
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        n = len([k for k in params if k.startswith("dense")])
+        for i in range(n):
+            p = params[f"dense{i}"]
+            h = h @ p["w"] + p["b"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+    h = x
+    for i in range(len(cfg.conv_channels)):
+        p = params[f"conv{i}"]
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        h = jax.nn.relu(h)
+        if i % 2 == 1:
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    n = len([k for k in params if k.startswith("dense")])
+    for i in range(n):
+        p = params[f"dense{i}"]
+        h = h @ p["w"] + p["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def classifier_loss(params: Params, cfg: ClassifierConfig,
+                    batch: Dict[str, jax.Array]
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = apply_classifier(params, cfg, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    loss = -jnp.mean(ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def n_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,179 @@
+"""Shared building blocks for the model zoo.
+
+Everything is functional: params are nested dicts of jnp arrays, modules are
+(init, apply) pairs of pure functions parameterized by ``ArchConfig``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# --------------------------------------------------------------------- dtype
+def dt(cfg: ArchConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg: ArchConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cast(x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return x.astype(dt(cfg))
+
+
+# ---------------------------------------------------------------------- init
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    if scale is None:
+        scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg: ArchConfig, width: Optional[int] = None) -> dict:
+    width = width or cfg.d_model
+    p = {"scale": jnp.ones((width,), pdt(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((width,), pdt(cfg))
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + cfg.norm_eps)
+    x = x * p["scale"].astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        x = x + p["bias"].astype(jnp.float32)
+    return x.astype(orig_dtype)
+
+
+# --------------------------------------------------------------- activations
+def activation_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+        "linear": lambda x: x,
+        "sigmoid": jax.nn.sigmoid,
+    }[name]
+
+
+# ---------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding over ``head_dim`` dims."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S). ``rope_pct``
+    rotates only the first ``pct`` of dims (StableLM-2 partial rotary).
+    """
+    d = x.shape[-1]
+    rot_d = int(d * rope_pct)
+    rot_d -= rot_d % 2
+    if rot_d == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    inv_freq = rope_frequencies(rot_d, theta)              # (rot_d//2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * inv_freq
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ----------------------------------------------------------------------- mlp
+def init_mlp(key: jax.Array, cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = pdt(cfg)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, cfg.d_model, d_ff, dtype),
+            "w_up": dense_init(k2, cfg.d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, cfg.d_model, dtype,
+                                 scale=d_ff ** -0.5),
+        }
+    return {
+        "w_up": dense_init(k1, cfg.d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, cfg.d_model, dtype,
+                             scale=d_ff ** -0.5),
+        "b_down": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        gate = act(x @ cast(p["w_gate"], cfg))
+        return (gate * (x @ cast(p["w_up"], cfg))) @ cast(p["w_down"], cfg)
+    act = activation_fn("gelu" if cfg.activation == "gelu" else "relu")
+    h = act(x @ cast(p["w_up"], cfg) + cast(p["b_up"], cfg))
+    return h @ cast(p["w_down"], cfg) + cast(p["b_down"], cfg)
+
+
+# ------------------------------------------------------------------- softmax
+def masked_softmax(scores: jax.Array, mask: Optional[jax.Array],
+                   softcap: float = 0.0) -> jax.Array:
+    """Softmax in f32 with an additive bool mask (True = attend)."""
+    scores = scores.astype(jnp.float32)
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """(q_len, kv_len) bool mask; query i attends kv j iff j <= i + offset."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return kj <= qi
+
+
+def window_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Token-level CE with padded-vocab masking. Returns (loss, accuracy)."""
+    logits = logits.astype(jnp.float32)
+    padded = logits.shape[-1]
+    if padded > vocab_size:
+        pad_mask = jnp.arange(padded) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # one-hot reduction instead of take_along_axis: fuses to
+    # iota/compare/select on TPU and avoids a gather along the
+    # vocab-sharded dim (which the SPMD partitioner handles poorly inside
+    # partial-manual shard_map regions).
+    onehot = (jnp.arange(padded)[None, None, :] == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, logp, 0.0), axis=-1)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return -jnp.mean(ll), acc

@@ -1,0 +1,621 @@
+"""Unified model zoo: one functional LM covering all six assigned families.
+
+Public API
+----------
+``init_params(rng, cfg)``                          → param pytree
+``train_loss(params, cfg, batch)``                 → (loss, metrics)
+``prefill(params, cfg, batch, cache_len, window)`` → (last_logits, cache)
+``decode_step(params, cfg, token, cache, extras)`` → (logits, cache)
+``init_cache(cfg, batch, cache_len, window)``      → zeroed cache pytree
+
+Families and their block stacks (every homogeneous stack is a
+``jax.lax.scan`` over stacked params, so HLO size is depth-independent):
+
+* dense / vlm : [GQA|MLA attn + MLP] x L         (vlm: patch embeds merged)
+* moe         : [GQA attn + MoE]    x L
+* ssm         : [Mamba-2 mixer]     x L
+* hybrid      : [(RG-LRU, RG-LRU, local-attn) + MLP each] x L/3 (+tail)
+* audio       : encoder [bidir attn + MLP] x Le, decoder [self + cross + MLP] x Ld
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (apply_mlp, apply_norm, cast,
+                                 cross_entropy_loss, embed_init, init_mlp,
+                                 init_norm, pdt)
+from repro.models.partition_ctx import constrain_activations
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# =====================================================================
+# helpers
+# =====================================================================
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal position encoding; positions (B, S) -> (B, S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _group_size(n_tokens: int) -> int:
+    """MoE group size: divides n_tokens, ≤1024, prefers ≥16 groups."""
+    for gs in range(min(1024, n_tokens), 0, -1):
+        if n_tokens % gs == 0 and (n_tokens // gs >= 16 or gs == n_tokens):
+            if n_tokens // gs >= 16:
+                return gs
+    for gs in range(min(1024, n_tokens), 0, -1):
+        if n_tokens % gs == 0:
+            return gs
+    return n_tokens
+
+
+def _logits(params: Params, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ cast(head, cfg)
+
+
+def _maybe_remat(fn, cfg: ArchConfig, train: bool):
+    if cfg.remat and train:
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+# =====================================================================
+# per-family block init
+# =====================================================================
+def _init_attn(key, cfg: ArchConfig) -> Params:
+    if cfg.attn_type == "mla":
+        return attn.init_mla(key, cfg)
+    return attn.init_gqa(key, cfg)
+
+
+def _init_dense_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_norm(cfg), "attn": _init_attn(k1, cfg),
+         "ln2": init_norm(cfg)}
+    if cfg.family == "moe":
+        p["ffn"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["ffn"] = init_mlp(k2, cfg)
+    return p
+
+
+def _init_ssm_block(key, cfg: ArchConfig) -> Params:
+    return {"ln": init_norm(cfg), "mixer": ssm_lib.init_mamba2(key, cfg)}
+
+
+def _init_hybrid_sub(key, cfg: ArchConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    mixer = (rglru_lib.init_rglru_block(k1, cfg) if kind == "rglru"
+             else attn.init_gqa(k1, cfg))
+    return {"ln1": init_norm(cfg), "mixer": mixer,
+            "ln2": init_norm(cfg), "mlp": init_mlp(k2, cfg)}
+
+
+def _init_hybrid_group(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, len(cfg.rglru.pattern))
+    return {f"sub{i}": _init_hybrid_sub(ks[i], cfg, kind)
+            for i, kind in enumerate(cfg.rglru.pattern)}
+
+
+def _init_enc_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg), "attn": attn.init_gqa(k1, cfg),
+            "ln2": init_norm(cfg), "ffn": init_mlp(k2, cfg)}
+
+
+def _init_dec_block(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg), "self_attn": attn.init_gqa(k1, cfg),
+            "ln_x": init_norm(cfg), "cross_attn": attn.init_gqa(k2, cfg),
+            "ln2": init_norm(cfg), "ffn": init_mlp(k3, cfg)}
+
+
+def _stack_init(fn, key, n: int) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Params:
+    k_embed, k_layers, k_head, k_enc, k_tail = jax.random.split(rng, 5)
+    dtype = pdt(cfg)
+    params: Params = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        # stored (d_model, vocab) so ``h @ lm_head`` needs no transpose
+        params["lm_head"] = embed_init(k_head, cfg.padded_vocab,
+                                       cfg.d_model, dtype).T
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), k_layers, cfg.n_layers)
+    elif fam == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), k_layers, cfg.n_layers)
+    elif fam == "hybrid":
+        plen = len(cfg.rglru.pattern)
+        n_groups, n_tail = divmod(cfg.n_layers, plen)
+        params["layers"] = _stack_init(
+            lambda k: _init_hybrid_group(k, cfg), k_layers, n_groups)
+        if n_tail:
+            params["tail"] = _stack_init(
+                lambda k: _init_hybrid_sub(k, cfg, "rglru"), k_tail, n_tail)
+    elif fam == "audio":
+        params["enc_layers"] = _stack_init(
+            lambda k: _init_enc_block(k, cfg), k_enc,
+            cfg.encdec.n_encoder_layers)
+        params["enc_norm"] = init_norm(cfg)
+        params["layers"] = _stack_init(
+            lambda k: _init_dec_block(k, cfg), k_layers, cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# =====================================================================
+# full-sequence block application (train / prefill)
+# =====================================================================
+def _attn_full(p, x, cfg, positions, mode="causal", window=None):
+    if cfg.attn_type == "mla":
+        return attn.mla_forward(p, x, cfg, positions=positions, mode=mode,
+                                window=window)
+    return attn.gqa_forward(p, x, cfg, positions=positions, mode=mode,
+                            window=window)
+
+
+def _dense_block_full(p, x, cfg, positions, window=None):
+    """Returns (x, kv_for_cache, aux)."""
+    x = constrain_activations(x)
+    a, kv = _attn_full(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                       positions, window=window)
+    x = constrain_activations(x + a)
+    h = apply_norm(p["ln2"], x, cfg)
+    if cfg.family == "moe":
+        f, aux = moe_lib.apply_moe(p["ffn"], h, cfg,
+                                   _group_size(h.shape[0] * h.shape[1]))
+    else:
+        f, aux = apply_mlp(p["ffn"], h, cfg), {}
+    return x + f, kv, aux
+
+
+def _hybrid_sub_full(p, x, cfg, positions, kind):
+    x = constrain_activations(x)
+    h = apply_norm(p["ln1"], x, cfg)
+    if kind == "rglru":
+        m, state = rglru_lib.rglru_forward(p["mixer"], h, cfg)
+    else:
+        m, state = attn.gqa_forward(p["mixer"], h, cfg, positions=positions,
+                                    mode="window", window=cfg.rglru.window)
+    x = x + m
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x, state
+
+
+def _trunk_full(params: Params, h: jax.Array, cfg: ArchConfig,
+                positions: jax.Array, *, train: bool,
+                enc_out: Optional[jax.Array] = None,
+                window: Optional[int] = None):
+    """Run the main stack full-sequence. Returns (h, per-layer cache, aux)."""
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            x, aux_sum = carry
+            x, kv, aux = _dense_block_full(lp, x, cfg, positions,
+                                           window=window)
+            aux_sum = aux_sum + aux.get("moe_aux", 0.0)
+            return (x, aux_sum), kv
+        body = _maybe_remat(body, cfg, train)
+        (h, aux), kvs = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                     params["layers"])
+        return h, kvs, {"moe_aux": aux}
+
+    if fam == "ssm":
+        def body(carry, lp):
+            x = constrain_activations(carry)
+            m, state = ssm_lib.mamba2_forward(
+                lp["mixer"], apply_norm(lp["ln"], x, cfg), cfg)
+            return x + m, state
+        body = _maybe_remat(body, cfg, train)
+        h, states = jax.lax.scan(body, h, params["layers"])
+        return h, states, {}
+
+    if fam == "hybrid":
+        pattern = cfg.rglru.pattern
+
+        def body(carry, gp):
+            x = carry
+            states = {}
+            for i, kind in enumerate(pattern):
+                x, st = _hybrid_sub_full(gp[f"sub{i}"], x, cfg, positions,
+                                         kind)
+                states[f"sub{i}"] = st
+            return x, states
+        body = _maybe_remat(body, cfg, train)
+        h, group_states = jax.lax.scan(body, h, params["layers"])
+        tail_states = None
+        if "tail" in params:
+            def tail_body(carry, lp):
+                x = carry
+                x, st = _hybrid_sub_full(lp, x, cfg, positions, "rglru")
+                return x, st
+            tail_body = _maybe_remat(tail_body, cfg, train)
+            h, tail_states = jax.lax.scan(tail_body, h, params["tail"])
+        return h, {"groups": group_states, "tail": tail_states}, {}
+
+    if fam == "audio":
+        def body(carry, lp):
+            x = constrain_activations(carry)
+            a, kv = attn.gqa_forward(lp["self_attn"],
+                                     apply_norm(lp["ln1"], x, cfg), cfg,
+                                     positions=positions, mode="causal",
+                                     window=window)
+            x = x + a
+            c, cross_kv = attn.gqa_forward(
+                lp["cross_attn"], apply_norm(lp["ln_x"], x, cfg), cfg,
+                positions=None, mode="full", kv_x=enc_out, kv_positions=None)
+            x = x + c
+            x = x + apply_mlp(lp["ffn"], apply_norm(lp["ln2"], x, cfg), cfg)
+            return x, {"self": kv, "cross": cross_kv}
+        body = _maybe_remat(body, cfg, train)
+        h, kvs = jax.lax.scan(body, h, params["layers"])
+        return h, kvs, {}
+
+    raise ValueError(fam)
+
+
+def _encode_audio(params: Params, frames: jax.Array, cfg: ArchConfig,
+                  train: bool) -> jax.Array:
+    """Whisper encoder over precomputed (stub-frontend) frame embeddings."""
+    B, F, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(F), (B, F))
+    h = frames.astype(jnp.dtype(cfg.compute_dtype))
+    h = h + _sinusoid(pos, cfg.d_model).astype(h.dtype)
+
+    def body(carry, lp):
+        x = constrain_activations(carry)
+        a, _ = attn.gqa_forward(lp["attn"], apply_norm(lp["ln1"], x, cfg),
+                                cfg, positions=None, mode="full")
+        x = x + a
+        x = x + apply_mlp(lp["ffn"], apply_norm(lp["ln2"], x, cfg), cfg)
+        return x, None
+    body = _maybe_remat(body, cfg, train)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(params["enc_norm"], h, cfg)
+
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+                  positions: jax.Array, train: bool) -> jax.Array:
+    if "h0" in batch:
+        # precomputed input embeddings (FL step computes the token gather
+        # outside the partial-manual shard_map region — see
+        # core/distributed.py)
+        return batch["h0"].astype(jnp.dtype(cfg.compute_dtype))
+    h = cast(params["embed"], cfg)[batch["tokens"]]
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(h.dtype)
+        h = jax.lax.dynamic_update_slice(h, img, (0, 0, 0))
+    if cfg.family == "audio":
+        h = h + _sinusoid(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+# =====================================================================
+# training
+# =====================================================================
+def train_loss(params: Params, cfg: ArchConfig,
+               batch: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = _embed_inputs(params, cfg, batch, positions, train=True)
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encode_audio(params, batch["frames"], cfg, train=True)
+    h, _, aux = _trunk_full(params, h, cfg, positions, train=True,
+                            enc_out=enc_out)
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = _logits(params, h, cfg)
+    loss, acc = cross_entropy_loss(logits, batch["labels"], cfg.vocab_size)
+    metrics = {"ce_loss": loss, "accuracy": acc}
+    total = loss
+    if cfg.family == "moe":
+        total = total + aux.get("moe_aux", 0.0)
+        metrics["moe_aux"] = aux.get("moe_aux", 0.0)
+    metrics["loss"] = total
+    return total, metrics
+
+
+# =====================================================================
+# caches
+# =====================================================================
+def _attn_cache_zeros(cfg: ArchConfig, B: int, C: int, ring: bool) -> Cache:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((B, C, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((B, C, m.qk_rope_head_dim), dtype)}
+    c = {"k": jnp.zeros((B, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+         "v": jnp.zeros((B, C, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    if ring:
+        c["pos"] = jnp.full((B, C), -1, jnp.int32)
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               window: Optional[int] = None) -> Cache:
+    """Zeroed decode cache. ``window`` < cache_len → ring (sliding) caches."""
+    fam = cfg.family
+    ring = window is not None and window < cache_len
+    C = min(cache_len, window) if ring else cache_len
+
+    def stack(fn, n):
+        return jax.vmap(lambda _: fn())(jnp.arange(n))
+
+    cache: Cache = {"index": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        cache["layers"] = stack(
+            lambda: _attn_cache_zeros(cfg, batch, C, ring), cfg.n_layers)
+    elif fam == "ssm":
+        cache["layers"] = stack(
+            lambda: ssm_lib.init_mamba2_state(cfg, batch), cfg.n_layers)
+    elif fam == "hybrid":
+        plen = len(cfg.rglru.pattern)
+        n_groups, n_tail = divmod(cfg.n_layers, plen)
+        W = cfg.rglru.window
+
+        def group_zero():
+            g = {}
+            for i, kind in enumerate(cfg.rglru.pattern):
+                if kind == "rglru":
+                    g[f"sub{i}"] = rglru_lib.init_rglru_state(cfg, batch)
+                else:
+                    g[f"sub{i}"] = _attn_cache_zeros(
+                        cfg, batch, min(W, cache_len), cache_len > W)
+            return g
+        cache["layers"] = stack(group_zero, n_groups)
+        if n_tail:
+            cache["tail"] = stack(
+                lambda: rglru_lib.init_rglru_state(cfg, batch), n_tail)
+    elif fam == "audio":
+        F = cfg.encdec.n_frames
+        dtype = jnp.dtype(cfg.compute_dtype)
+
+        def dec_zero():
+            return {"self": _attn_cache_zeros(cfg, batch, C, ring),
+                    "cross": {"k": jnp.zeros((batch, F, cfg.n_kv_heads,
+                                              cfg.head_dim), dtype),
+                              "v": jnp.zeros((batch, F, cfg.n_kv_heads,
+                                              cfg.head_dim), dtype)}}
+        cache["layers"] = stack(dec_zero, cfg.n_layers)
+    return cache
+
+
+def _fill_attn_cache(zero: Cache, kv, cfg: ArchConfig, prefill_len: int):
+    """Place prefill K/V (or MLA latents) into a zeroed cache entry."""
+    if cfg.attn_type == "mla":
+        c_kv, k_rope = kv
+        C = zero["c_kv"].shape[1]
+        take = min(prefill_len, C)
+        out = dict(zero)
+        out["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            zero["c_kv"], c_kv[:, -take:].astype(zero["c_kv"].dtype),
+            0, axis=1)
+        out["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            zero["k_rope"], k_rope[:, -take:].astype(zero["k_rope"].dtype),
+            0, axis=1)
+        return out
+    k, v = kv
+    C = zero["k"].shape[1]
+    out = dict(zero)
+    if "pos" in zero:                         # ring: keep the last C tokens
+        take = min(prefill_len, C)
+        start = (prefill_len - take) % C if prefill_len > C else 0
+        ks, vs = k[:, -take:], v[:, -take:]
+        # ring layout: slot = pos % C
+        slots = (jnp.arange(prefill_len - take, prefill_len)) % C
+        order = jnp.argsort(slots)
+        out["k"] = jnp.zeros_like(zero["k"]).at[:, slots[order]].set(
+            ks[:, order].astype(zero["k"].dtype))
+        out["v"] = jnp.zeros_like(zero["v"]).at[:, slots[order]].set(
+            vs[:, order].astype(zero["v"].dtype))
+        pos = jnp.full(zero["pos"].shape, -1, jnp.int32)
+        pos = pos.at[:, slots[order]].set(
+            jnp.arange(prefill_len - take, prefill_len, dtype=jnp.int32)
+            [order][None, :])
+        out["pos"] = pos
+        del start
+    else:
+        take = min(prefill_len, C)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(
+            zero["k"], k[:, -take:].astype(zero["k"].dtype), 0, axis=1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(
+            zero["v"], v[:, -take:].astype(zero["v"].dtype), 0, axis=1)
+    return out
+
+
+# =====================================================================
+# prefill
+# =====================================================================
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            cache_len: Optional[int] = None,
+            window: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (last-position logits (B, V), cache). ``cache_len`` defaults to
+    the prompt length (cache exactly full after prefill).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = _embed_inputs(params, cfg, batch, positions, train=False)
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encode_audio(params, batch["frames"], cfg, train=False)
+    h, layer_out, _ = _trunk_full(params, h, cfg, positions, train=False,
+                                  enc_out=enc_out, window=window)
+    h = apply_norm(params["final_norm"], h[:, -1:], cfg)
+    logits = _logits(params, h, cfg)[:, 0]
+
+    zero = init_cache(cfg, B, cache_len, window)
+    cache: Cache = {"index": jnp.full((), S, jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        cache["layers"] = jax.vmap(
+            lambda z, kv: _fill_attn_cache(z, kv, cfg, S))(
+                zero["layers"], layer_out)
+    elif fam == "ssm":
+        cache["layers"] = layer_out
+    elif fam == "hybrid":
+        groups = layer_out["groups"]
+
+        def fill_group(z, st):
+            out = {}
+            for i, kind in enumerate(cfg.rglru.pattern):
+                if kind == "rglru":
+                    out[f"sub{i}"] = st[f"sub{i}"]
+                else:
+                    out[f"sub{i}"] = _fill_attn_cache(
+                        z[f"sub{i}"], st[f"sub{i}"], cfg, S)
+            return out
+        cache["layers"] = jax.vmap(fill_group)(zero["layers"], groups)
+        if layer_out["tail"] is not None:
+            cache["tail"] = layer_out["tail"]
+    elif fam == "audio":
+        cache["layers"] = jax.vmap(
+            lambda z, kv: {"self": _fill_attn_cache(z["self"], kv["self"],
+                                                    cfg, S),
+                           "cross": {"k": kv["cross"][0].astype(
+                               z["cross"]["k"].dtype),
+                               "v": kv["cross"][1].astype(
+                               z["cross"]["v"].dtype)}})(
+            zero["layers"], layer_out)
+    return logits, cache
+
+
+# =====================================================================
+# decode
+# =====================================================================
+def _attn_decode(p, x, cfg, entry, index, window):
+    if cfg.attn_type == "mla":
+        return attn.mla_decode(p, x, cfg, entry, index)
+    return attn.gqa_decode(p, x, cfg, entry, index, window=window)
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jax.Array,
+                cache: Cache,
+                window: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    """One-token decode. token: (B, 1) int32. Returns (logits (B, V), cache)."""
+    index = cache["index"]
+    B = token.shape[0]
+    h = cast(params["embed"], cfg)[token]               # (B, 1, D)
+    if cfg.family == "audio":
+        pos = jnp.broadcast_to(index, (B, 1))
+        h = h + _sinusoid(pos, cfg.d_model).astype(h.dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            lp, entry = inp
+            a, new_entry = _attn_decode(lp["attn"],
+                                        apply_norm(lp["ln1"], x, cfg), cfg,
+                                        entry, index, window)
+            x = x + a
+            hh = apply_norm(lp["ln2"], x, cfg)
+            if cfg.family == "moe":
+                f, _ = moe_lib.apply_moe(lp["ffn"], hh, cfg, _group_size(B))
+            else:
+                f = apply_mlp(lp["ffn"], hh, cfg)
+            return x + f, new_entry
+        h, new_layers = jax.lax.scan(body, h,
+                                     (params["layers"], cache["layers"]))
+        new_cache = dict(cache, layers=new_layers)
+
+    elif fam == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            m, new_st = ssm_lib.mamba2_decode(
+                lp["mixer"], apply_norm(lp["ln"], x, cfg), cfg, st)
+            return x + m, new_st
+        h, new_layers = jax.lax.scan(body, h,
+                                     (params["layers"], cache["layers"]))
+        new_cache = dict(cache, layers=new_layers)
+
+    elif fam == "hybrid":
+        def sub_decode(sp, x, st, kind):
+            hh = apply_norm(sp["ln1"], x, cfg)
+            if kind == "rglru":
+                m, new_st = rglru_lib.rglru_decode(sp["mixer"], hh, cfg, st)
+            else:
+                m, new_st = attn.gqa_decode(sp["mixer"], hh, cfg, st, index,
+                                            window=cfg.rglru.window)
+            x = x + m
+            x = x + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], x, cfg), cfg)
+            return x, new_st
+
+        def body(x, inp):
+            gp, gst = inp
+            new = {}
+            for i, kind in enumerate(cfg.rglru.pattern):
+                x, new[f"sub{i}"] = sub_decode(gp[f"sub{i}"], x,
+                                               gst[f"sub{i}"], kind)
+            return x, new
+        h, new_groups = jax.lax.scan(body, h,
+                                     (params["layers"], cache["layers"]))
+        new_cache = dict(cache, layers=new_groups)
+        if "tail" in cache:
+            def tail_body(x, inp):
+                lp, st = inp
+                return sub_decode(lp, x, st, "rglru")
+            h, new_tail = jax.lax.scan(tail_body, h,
+                                       (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+    elif fam == "audio":
+        def body(x, inp):
+            lp, entry = inp
+            a, new_self = attn.gqa_decode(lp["self_attn"],
+                                          apply_norm(lp["ln1"], x, cfg), cfg,
+                                          entry["self"], index, window=window)
+            x = x + a
+            hh = apply_norm(lp["ln_x"], x, cfg)
+            q = (hh @ cast(lp["cross_attn"]["wq"], cfg)).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim)
+            c = attn.decode_attention(
+                q, entry["cross"]["k"], entry["cross"]["v"],
+                index=jnp.int32(10 ** 9))          # all frames visible
+            c = c.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+            x = x + c @ cast(lp["cross_attn"]["wo"], cfg)
+            x = x + apply_mlp(lp["ffn"], apply_norm(lp["ln2"], x, cfg), cfg)
+            return x, {"self": new_self, "cross": entry["cross"]}
+        h, new_layers = jax.lax.scan(body, h,
+                                     (params["layers"], cache["layers"]))
+        new_cache = dict(cache, layers=new_layers)
+    else:
+        raise ValueError(fam)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = _logits(params, h, cfg)[:, 0]
+    new_cache["index"] = index + 1
+    return logits, new_cache
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k router with group-wise capacity dispatch.
+
+Follows the production einsum-dispatch formulation (Switch/GShard/MaxText):
+tokens are reshaped into groups, each group routes its tokens into per-expert
+capacity slots via cumulative-sum position assignment, and expert computation
+is a single batched einsum over (expert, capacity) blocks. Under GSPMD with
+the expert axis sharded over the ``model`` mesh axis this lowers to
+expert-parallel all-to-alls — exactly the communication pattern the roofline
+§collective term tracks for the MoE architectures.
+
+Capacity math: slots-per-expert C = group_size * capacity_factor * top_k /
+n_experts; tokens overflowing an expert's capacity within a group are dropped
+(their combine weight is zero) — the standard lossy-dispatch trade-off.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import cast, dense_init, init_mlp, apply_mlp, pdt
+
+
+def _capacity(group_size: int, cfg: ArchConfig) -> int:
+    moe = cfg.moe
+    c = int(group_size * moe.capacity_factor * moe.top_k / moe.n_experts)
+    c = max(c, moe.top_k)
+    return min(c, group_size)
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> dict:
+    moe = cfg.moe
+    ks = jax.random.split(key, 5)
+    dtype = pdt(cfg)
+    E, D, F = moe.n_experts, cfg.d_model, moe.d_ff_expert
+
+    def expert_stack(k, d_in, d_out, scale=None):
+        kk = jax.random.split(k, E)
+        return jax.vmap(
+            lambda ki: dense_init(ki, d_in, d_out, dtype, scale))(kk)
+
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32, scale=D ** -0.5),
+        "w_gate": expert_stack(ks[1], D, F),                   # (E, D, F)
+        "w_up": expert_stack(ks[2], D, F),                     # (E, D, F)
+        "w_down": expert_stack(ks[3], F, D, scale=F ** -0.5),  # (E, F, D)
+    }
+    if moe.shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=moe.d_ff_expert)
+    return p
+
+
+def route(router_logits: jax.Array, cfg: ArchConfig, capacity: int
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Group-wise top-k routing with capacity assignment.
+
+    router_logits: (G, S, E). Returns (dispatch (G,S,E,C) bool-ish f32,
+    combine (G,S,E,C) f32, aux_losses (load_balance, router_z)).
+    """
+    moe = cfg.moe
+    G, S, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+
+    # aux losses (Switch-style load balance + z-loss)
+    density = jnp.mean(probs, axis=1)                         # (G, E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), E)
+    frac = jnp.mean(top1, axis=1)                             # (G, E)
+    lb_loss = E * jnp.mean(jnp.sum(frac * density, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(
+        router_logits.astype(jnp.float32), axis=-1) ** 2)
+
+    # iterative top-k: mask out chosen experts each round
+    dispatch = jnp.zeros((G, S, E, capacity), jnp.float32)
+    combine = jnp.zeros((G, S, E, capacity), jnp.float32)
+    masked = probs
+    # running per-expert slot counter across the k rounds
+    fill = jnp.zeros((G, E), jnp.int32)
+    for _ in range(moe.top_k):
+        idx = jnp.argmax(masked, axis=-1)                     # (G, S)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (G, S, E)
+        # one-hot reduction instead of take_along_axis (gather-free: the
+        # SPMD partitioner mishandles gathers in manual subgroups)
+        gate = jnp.sum(masked * onehot.astype(masked.dtype), axis=-1)
+        # position of each token within its expert's slots for this round
+        pos_in_expert = (jnp.cumsum(onehot, axis=1) - onehot) + fill[:, None]
+        pos = jnp.sum(onehot * pos_in_expert, axis=-1)        # (G, S)
+        keep = pos < capacity
+        slot = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                              dtype=jnp.float32)              # (G, S, C)
+        d = onehot.astype(jnp.float32)[..., None] * slot[:, :, None, :]
+        dispatch = dispatch + d
+        combine = combine + d * gate[..., None, None]
+        fill = fill + jnp.sum(onehot * keep[..., None].astype(jnp.int32),
+                              axis=1)
+        masked = masked * (1.0 - onehot.astype(masked.dtype))
+    return dispatch, combine, (lb_loss, z_loss)
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig,
+              group_size: int = 1024) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (out (B, S, D), aux-loss metrics)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    tokens = x.reshape(B * S, D)
+    n = tokens.shape[0]
+    gs = min(group_size, n)
+    G = n // gs
+    assert G * gs == n, f"tokens {n} not divisible by group {gs}"
+    xg = tokens.reshape(G, gs, D)
+    capacity = _capacity(gs, cfg)
+
+    logits = xg @ cast(p["router"], cfg).astype(xg.dtype)     # (G, S, E)
+    dispatch, combine, (lb, zl) = route(
+        logits.astype(jnp.float32), cfg, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    # dispatch tokens into (G, E, C, D) expert blocks
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    # expert FFN (swiglu), expert dim contracted against stacked weights
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, cast(p["w_gate"], cfg)))
+    up = jnp.einsum("gecd,edf->gecf", xe, cast(p["w_up"], cfg))
+    ye = jnp.einsum("gecf,efd->gecd", gate * up, cast(p["w_down"], cfg))
+    # combine back to token order
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)
+    y = y.reshape(B, S, D)
+
+    if moe.shared_expert:
+        y = y + apply_mlp(p["shared"], x, cfg)
+
+    metrics = {"moe_lb_loss": lb, "moe_z_loss": zl,
+               "moe_aux": moe.load_balance_loss * lb + moe.router_z_loss * zl}
+    return y, metrics

@@ -1,0 +1,50 @@
+"""Activation-sharding context: step builders install the batch-axes spec
+here; model code constrains the residual stream at layer boundaries.
+
+Without explicit constraints GSPMD sometimes replicates the (B, S, D)
+residual stream when head counts don't divide the model axis (56 or 40 heads
+on 16 shards), turning per-layer partial-sum all-reduces into full-batch
+f32 all-reduces — the dominant collective term of the §Perf baselines.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVATION_AXES: contextvars.ContextVar[Optional[Tuple]] = \
+    contextvars.ContextVar("activation_axes", default=None)
+_SEQ_AXIS: contextvars.ContextVar[Optional[str]] = \
+    contextvars.ContextVar("seq_axis", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Optional[Tuple],
+                        seq_axis: Optional[str] = None):
+    """batch_axes: mesh axis names for the batch dim, e.g. ('pod', 'data').
+    seq_axis: optional mesh axis for the sequence dim (2D activation
+    sharding — sequence parallelism for long-context prefill/train)."""
+    t1 = _ACTIVATION_AXES.set(batch_axes)
+    t2 = _SEQ_AXIS.set(seq_axis)
+    try:
+        yield
+    finally:
+        _ACTIVATION_AXES.reset(t1)
+        _SEQ_AXIS.reset(t2)
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Constrain a (B, S, D) activation: batch over data axes, optionally
+    sequence over the model axis, feature replicated."""
+    axes = _ACTIVATION_AXES.get()
+    if axes is None:
+        return x
+    seq = _SEQ_AXIS.get()
+    if x.ndim >= 3 and seq is not None and x.shape[1] % 16 == 0:
+        spec = P(axes, seq, *([None] * (x.ndim - 2)))
+    else:
+        spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), r/i input-dependent sigmoid gates.
+Training/prefill evaluate it with ``jax.lax.associative_scan`` (log-depth on
+TPU); decode is a single fused elementwise step over O(width) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import cast, dense_init, pdt
+
+_C = 8.0   # Griffin's fixed recurrence-sharpness constant
+
+
+def init_rglru_block(key: jax.Array, cfg: ArchConfig) -> dict:
+    rg = cfg.rglru
+    W = rg.lru_width
+    ks = jax.random.split(key, 7)
+    dtype = pdt(cfg)
+    # Lambda init so that a^c spans ~(0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[5], (W,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^-1(-log u / c)
+    return {
+        "w_x": dense_init(ks[0], cfg.d_model, W, dtype),
+        "w_gate": dense_init(ks[1], cfg.d_model, W, dtype),
+        "conv_w": (jax.random.normal(ks[2], (rg.conv_width, W), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": dense_init(ks[3], W, W, dtype),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": dense_init(ks[4], W, W, dtype),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lambda": lam,
+        "w_out": dense_init(ks[6], W, cfg.d_model, dtype, scale=W ** -0.5),
+    }
+
+
+def _gates(p: dict, xs: jax.Array, cfg: ArchConfig):
+    """a_t (decay) and scaled input gate, in float32."""
+    r = jax.nn.sigmoid(xs @ cast(p["w_a"], cfg) + p["b_a"].astype(xs.dtype))
+    i = jax.nn.sigmoid(xs @ cast(p["w_i"], cfg) + p["b_i"].astype(xs.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lambda"])
+             * r.astype(jnp.float32))                     # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * i.astype(jnp.float32) * xs.astype(jnp.float32)
+    return a, b, log_a
+
+
+def _conv_full(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    w = cast(p["conv_w"], cfg)
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(W)) \
+        + cast(p["conv_b"], cfg)
+
+
+def rglru_forward(p: dict, x: jax.Array, cfg: ArchConfig,
+                  init_state: Optional[dict] = None
+                  ) -> Tuple[jax.Array, dict]:
+    """Full-sequence recurrent block. Returns (out, decode-ready state)."""
+    B, S, _ = x.shape
+    xs_raw = x @ cast(p["w_x"], cfg)                      # (B,S,W)
+    gate = x @ cast(p["w_gate"], cfg)
+    xs = _conv_full(p, xs_raw, cfg)
+    a, b, log_a = _gates(p, xs, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_state is not None and "h" in init_state:
+        # fold a prior hidden state in: h_t += (prod_{<=t} a) * h0
+        h = h + a_sc * init_state["h"].astype(jnp.float32)[:, None, :]
+    y = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ cast(p["w_out"], cfg)
+    state = {"conv": xs_raw[:, -(cfg.rglru.conv_width - 1):].astype(jnp.float32),
+             "h": h[:, -1].astype(jnp.float32)}
+    return out, state
+
+
+def rglru_decode(p: dict, x: jax.Array, cfg: ArchConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """One-token step. state: {"conv": (B, W-1, width), "h": (B, width)}."""
+    xs_raw = x @ cast(p["w_x"], cfg)                      # (B,1,W)
+    gate = x @ cast(p["w_gate"], cfg)
+    window = jnp.concatenate([state["conv"],
+                              xs_raw.astype(jnp.float32)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    xs = (jnp.einsum("bwc,wc->bc", window, w)
+          + p["conv_b"].astype(jnp.float32))[:, None, :]  # (B,1,W)
+    a, b, _ = _gates(p, xs.astype(x.dtype), cfg)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ cast(p["w_out"], cfg)
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int) -> dict:
+    rg = cfg.rglru
+    return {"conv": jnp.zeros((batch, rg.conv_width - 1, rg.lru_width),
+                              jnp.float32),
+            "h": jnp.zeros((batch, rg.lru_width), jnp.float32)}

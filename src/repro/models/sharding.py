@@ -1,0 +1,152 @@
+"""GSPMD sharding rules: param / batch / cache PartitionSpec pytrees.
+
+Rules are name-based over the functional param tree and divisibility-guarded:
+a dim is sharded over the ``model`` axis only when its size divides evenly;
+otherwise it stays replicated and XLA's SPMD propagation decides activation
+layouts. Optimizer state can additionally be sharded over the ``data`` axis
+(ZeRO-1) via :func:`zero1_spec`.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weights sharded on their output (last) dim over `model`
+_OUT_SHARDED = {
+    "wq", "wk", "wv", "w_uq", "w_dkv", "w_gate", "w_up", "w_in",
+    "w_x", "w_a", "w_i", "w_dq",
+}
+# weights sharded on their input (second-to-last) dim over `model`
+_IN_SHARDED = {"wo", "w_down", "w_out"}
+# MLA up-projections (rank, H, head_dim): shard the latent rank
+_RANK_SHARDED = {"w_uk", "w_uv"}
+_REPLICATED = {"router", "b_a", "b_i", "lambda", "A_log", "dt_bias", "D",
+               "scale", "bias", "conv_b", "dt_bias", "b_up", "b_down"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+def _divides(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def _spec_for(names: Tuple[str, ...], shape: Tuple[int, ...],
+              mesh: Mesh) -> P:
+    name = names[-1]
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def shard(dim: int):
+        if _divides(shape[dim], mesh, "model"):
+            spec[dim] = "model"
+
+    if name in _REPLICATED or nd == 0 or nd == 1:
+        pass
+    elif name == "embed":
+        shard(0)                                   # (V, D) vocab-sharded
+    elif name == "lm_head":
+        shard(nd - 1)                              # (D, V)
+    elif name in _RANK_SHARDED:
+        shard(nd - 3) if nd >= 3 else None
+    elif name == "conv_w":
+        shard(nd - 1)                              # (W, C) channel-sharded
+    elif name in ("w_gate", "w_up", "w_down") and nd >= 4:
+        # stacked MoE experts (L, E, D, F) → expert-parallel
+        shard(nd - 3)
+    elif name in _OUT_SHARDED:
+        shard(nd - 1)
+    elif name in _IN_SHARDED:
+        shard(nd - 2)
+    return P(*spec)
+
+
+def param_specs(param_shapes: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a param (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_names(path), leaf.shape, mesh),
+        param_shapes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard the leading batch dim over (pod, data) when divisible."""
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if global_batch % total != 0:
+        return P(*([None] * ndim))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def batch_specs(batch_shapes: Any, mesh: Mesh) -> Any:
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        return data_spec(mesh, b, leaf.ndim)
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh) -> Any:
+    """Decode caches: leaves are (L, B, ...) stacked per layer (batch dim 1)
+    or scalars ('index')."""
+    def spec(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0 or names[-1] == "index":
+            return P()
+        batch_dim = 1 if names[0] in ("layers", "tail") else 0
+        if leaf.ndim <= batch_dim:
+            return P(*([None] * leaf.ndim))
+        b = leaf.shape[batch_dim]
+        inner = data_spec(mesh, b, leaf.ndim - batch_dim)
+        return P(*([None] * batch_dim), *inner)
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def fully_shard(spec_tree: Any, shape_tree: Any, mesh: Mesh,
+                min_size: int = 1 << 20) -> Any:
+    """Inference-mode 2D weight sharding: additionally shard one unsharded
+    dim of every large leaf over the ``data`` axis (serving has no gradient
+    sync, so the data axis is free capacity — this is how a 773B-param MoE
+    fits a 16GB/chip pod at decode time)."""
+    def upd(spec, shp):
+        if any(d for d in spec if d is not None):
+            size = 1
+            for d in shp.shape:
+                size *= d
+            if size >= min_size:
+                return zero1_spec(spec, shp.shape, mesh)
+        return spec
+    return jax.tree_util.tree_map(
+        upd, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Add `data`-axis sharding to one unsharded dim (optimizer moments)."""
+    if "data" not in mesh.shape:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, n) in enumerate(zip(parts, shape)):
+        if p is None and n % mesh.shape["data"] == 0 and n > 1:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

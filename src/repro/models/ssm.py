@@ -1,0 +1,221 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill use the chunked dual form: within-chunk computation is the
+quadratic "attention-like" branch (MXU-friendly (chunk x chunk) matmuls) and
+across chunks a linear recurrence over per-chunk states — i.e. the SSD
+algorithm of the paper, expressed with einsums + ``lax.scan`` so XLA sees a
+short recurrence over S/chunk steps instead of S sequential steps.
+
+Decode keeps O(1) state per layer: a depthwise-conv tail of the last
+(conv_width-1) inputs and the (H, P, N) SSM state — this is why mamba2 runs
+the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import cast, dense_init, init_norm, apply_norm, pdt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with S[i, j] = sum_{k=j+1..i} x_k for
+    i >= j and -inf elsewhere (log-space decay between positions)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,        # (B, S, H, P) — pre-scaled by dt
+    dA: jax.Array,       # (B, S, H)    — dt * A (negative)
+    Bm: jax.Array,       # (B, S, G, N)
+    Cm: jax.Array,       # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = s + pad
+    nc = S // chunk
+
+    f32 = jnp.float32
+    # reshape heads into (group, heads-per-group) and sequence into chunks
+    xc = x.reshape(b, nc, chunk, g, hg, p).astype(f32)
+    dAc = dA.reshape(b, nc, chunk, g, hg).transpose(0, 3, 4, 1, 2)  # b,g,hg,c,i
+    Bc = Bm.reshape(b, nc, chunk, g, n).astype(f32)
+    Cc = Cm.reshape(b, nc, chunk, g, n).astype(f32)
+
+    dA_cumsum = jnp.cumsum(dAc, axis=-1)                   # (b,g,hg,c,i)
+
+    # --- intra-chunk (quadratic, "attention-like") branch
+    L = jnp.exp(_segsum(dAc))                              # (b,g,hg,c,i,j)
+    CB = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)          # (b,c,g,i,j)
+    y_diag = jnp.einsum("bcgij,bghcij,bcjghp->bcighp", CB, L, xc)
+
+    # --- per-chunk input states
+    decay_states = jnp.exp(dA_cumsum[..., -1:] - dA_cumsum)   # (b,g,hg,c,j)
+    states = jnp.einsum("bcjgn,bghcj,bcjghp->bcghpn", Bc, decay_states, xc)
+
+    # --- inter-chunk linear recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cumsum[..., -1])              # (b,g,hg,c)
+    if init_state is None:
+        s0 = jnp.zeros((b, g, hg, p, n), f32)
+    else:
+        s0 = init_state.reshape(b, g, hg, p, n).astype(f32)
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                  # (b,g,hg,p,n), (b,g,hg)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4, 5)          # (c,b,g,hg,p,n)
+    decay_t = chunk_decay.transpose(3, 0, 1, 2)            # (c,b,g,hg)
+    final_state, prev_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (b,c,g,hg,p,n)
+
+    # --- inter-chunk output contribution
+    state_decay_out = jnp.exp(dA_cumsum)                   # (b,g,hg,c,i)
+    y_off = jnp.einsum("bcign,bcghpn,bghci->bcighp",
+                       Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, S, h, p)[:, :s]
+    return y.astype(x.dtype), final_state.reshape(b, h, p, n)
+
+
+# =====================================================================
+# Mamba-2 block
+# =====================================================================
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_channels = d_inner + 2 * ssm.n_groups * ssm.d_state
+    return ssm, d_inner, n_heads, conv_channels
+
+
+def init_mamba2(key: jax.Array, cfg: ArchConfig) -> dict:
+    ssm, d_inner, n_heads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    dtype = pdt(cfg)
+    return {
+        # joint projection to [z | xBC | dt]
+        "w_in": dense_init(ks[0], cfg.d_model,
+                           d_inner + conv_ch + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads,
+                                      dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": init_norm(cfg, d_inner),
+        "w_out": dense_init(ks[2], d_inner, cfg.d_model, dtype,
+                            scale=d_inner ** -0.5),
+    }
+
+
+def _split_in(p: dict, x: jax.Array, cfg: ArchConfig):
+    ssm, d_inner, n_heads, conv_ch = _dims(cfg)
+    h = x @ cast(p["w_in"], cfg)
+    z, xbc, dt = jnp.split(h, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_full(p: dict, xbc: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Causal depthwise conv over the sequence (train / prefill)."""
+    w = cast(p["conv_w"], cfg)                      # (W, C)
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + cast(p["conv_b"], cfg))
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ArchConfig,
+                   init_state: Optional[dict] = None
+                   ) -> Tuple[jax.Array, dict]:
+    """Full-sequence mixer. Returns (out, final_state dict)."""
+    ssm, d_inner, n_heads, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc = _conv_full(p, xbc, cfg)
+    xs, Bm, Cm = jnp.split(
+        xbc, [d_inner, d_inner + ssm.n_groups * ssm.d_state], axis=-1)
+    xs = xs.reshape(B, S, n_heads, ssm.head_dim)
+    Bm = Bm.reshape(B, S, ssm.n_groups, ssm.d_state)
+    Cm = Cm.reshape(B, S, ssm.n_groups, ssm.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    y, final = ssd_scan(xs * dt[..., None], dt * A, Bm, Cm,
+                        ssm.chunk_size,
+                        None if init_state is None else init_state["ssm"])
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y * jax.nn.silu(z), cfg)
+    out = y @ cast(p["w_out"], cfg)
+
+    # decode-ready state: last (conv_width-1) pre-activation conv inputs
+    z2, xbc_raw, _ = _split_in(p, x[:, -(ssm.conv_width - 1):], cfg)
+    state = {"conv": xbc_raw.astype(jnp.float32), "ssm": final}
+    return out, state
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg: ArchConfig,
+                  state: dict) -> Tuple[jax.Array, dict]:
+    """One-token step. state: {"conv": (B, W-1, C), "ssm": (B, H, P, N)}."""
+    ssm, d_inner, n_heads, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    z, xbc_new, dt = _split_in(p, x, cfg)                # (B,1,*)
+    window = jnp.concatenate(
+        [state["conv"], xbc_new.astype(jnp.float32)], axis=1)  # (B, W, C)
+    w = p["conv_w"].astype(jnp.float32)                  # (W, C)
+    conv = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv)[:, None, :].astype(x.dtype)  # (B,1,C)
+
+    xs, Bm, Cm = jnp.split(
+        xbc[:, 0], [d_inner, d_inner + ssm.n_groups * ssm.d_state], axis=-1)
+    xs = xs.reshape(B, n_heads, ssm.head_dim)            # (B,H,P)
+    Bm = Bm.reshape(B, ssm.n_groups, ssm.d_state)
+    Cm = Cm.reshape(B, ssm.n_groups, ssm.d_state)
+    hg = n_heads // ssm.n_groups
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A)                             # (B,H)
+    h_prev = state["ssm"].astype(jnp.float32)            # (B,H,P,N)
+    xbar = (xs.astype(jnp.float32) * dt1[..., None])     # (B,H,P)
+    Bh = jnp.repeat(Bm, hg, axis=1)                      # (B,H,N)
+    Ch = jnp.repeat(Cm, hg, axis=1)
+    h_new = h_prev * decay[..., None, None] + xbar[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y * jax.nn.silu(z), cfg)
+    out = y @ cast(p["w_out"], cfg)
+    new_state = {"conv": window[:, 1:], "ssm": h_new}
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    ssm, d_inner, n_heads, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, ssm.conv_width - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,113 @@
+"""Pure-JAX optimizers (no external deps): SGD(+momentum), Adam, AdamW.
+
+API: ``opt = make_optimizer(name, lr, ...)``; ``state = opt.init(params)``;
+``params, state = opt.update(params, grads, state)``. All ops are pytree maps
+so they jit/shard transparently; the ``sgdm_bf16`` variant keeps its momentum
+in bfloat16 for the giant-MoE memory budget (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+
+
+def make_optimizer(name: str, lr: float, *, weight_decay: float = 0.0,
+                   grad_clip: float = 0.0, b1: float = 0.9,
+                   b2: float = 0.999, eps: float = 1e-8,
+                   momentum: float = 0.9) -> Optimizer:
+    def maybe_clip(grads):
+        return clip_by_global_norm(grads, grad_clip) if grad_clip > 0 \
+            else grads
+
+    if name == "sgd":
+        def init(params):
+            return {"count": jnp.zeros((), jnp.int32)}
+
+        def update(params, grads, state):
+            grads = maybe_clip(grads)
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, {"count": state["count"] + 1}
+        return Optimizer(name, init, update)
+
+    if name in ("sgdm", "sgdm_bf16"):
+        mdtype = jnp.bfloat16 if name == "sgdm_bf16" else jnp.float32
+
+        def init(params):
+            return {"count": jnp.zeros((), jnp.int32),
+                    "mu": jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, mdtype), params)}
+
+        def update(params, grads, state):
+            grads = maybe_clip(grads)
+            mu = jax.tree_util.tree_map(
+                lambda m, g: (momentum * m.astype(jnp.float32)
+                              + g.astype(jnp.float32)).astype(mdtype),
+                state["mu"], grads)
+            new = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32)
+                              - lr * m.astype(jnp.float32)).astype(p.dtype),
+                params, mu)
+            return new, {"count": state["count"] + 1, "mu": mu}
+        return Optimizer(name, init, update)
+
+    if name in ("adam", "adamw"):
+        wd = weight_decay if name == "adamw" else 0.0
+
+        def init(params):
+            zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+            return {"count": jnp.zeros((), jnp.int32),
+                    "m": jax.tree_util.tree_map(zeros, params),
+                    "v": jax.tree_util.tree_map(zeros, params)}
+
+        def update(params, grads, state):
+            grads = maybe_clip(grads)
+            t = state["count"] + 1
+            m = jax.tree_util.tree_map(
+                lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32),
+                state["m"], grads)
+            v = jax.tree_util.tree_map(
+                lambda a, g: b2 * a
+                + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                state["v"], grads)
+            tf = t.astype(jnp.float32)
+
+            def upd(p, ml, vl):
+                mh = ml / (1 - b1 ** tf)
+                vh = vl / (1 - b2 ** tf)
+                step = mh / (jnp.sqrt(vh) + eps)
+                if wd > 0.0 and p.ndim >= 2:
+                    step = step + wd * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            new = jax.tree_util.tree_map(upd, params, m, v)
+            return new, {"count": t, "m": m, "v": v}
+        return Optimizer(name, init, update)
+
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,123 @@
+"""Compressor API invariants — unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import AEConfig
+from repro.core import (ChunkedAECompressor, ChunkedAEConfig,
+                        ComposedCompressor, FCAECompressor,
+                        IdentityCompressor, QuantizeCompressor,
+                        TopKCompressor, init_chunked_ae, init_fc_ae)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def _tree(seed=0, sizes=((7, 5), (64,), (3, 4, 2))):
+    k = jax.random.PRNGKey(seed)
+    return {f"p{i}": jax.random.normal(jax.random.PRNGKey(seed + i), s)
+            for i, s in enumerate(sizes)}
+
+
+def test_identity_roundtrip_exact():
+    tree = _tree()
+    decoded, stats = IdentityCompressor().roundtrip(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(decoded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats["compression_ratio"] == pytest.approx(1.0, rel=0.01)
+
+
+@pytest.mark.parametrize("bits,min_ratio", [(8, 3.5), (4, 6.0)])
+def test_quantize_ratio_and_error(bits, min_ratio):
+    tree = _tree(1)
+    comp = QuantizeCompressor(bits=bits, block=64)
+    decoded, stats = comp.roundtrip(tree)
+    assert stats["compression_ratio"] >= min_ratio
+    flat, _ = ravel_pytree(tree)
+    dflat, _ = ravel_pytree(decoded)
+    qmax = 2 ** (bits - 1) - 1
+    assert float(jnp.max(jnp.abs(flat - dflat))) <= float(
+        jnp.max(jnp.abs(flat))) / qmax + 1e-6
+
+
+def test_topk_keeps_largest():
+    tree = _tree(2)
+    comp = TopKCompressor(fraction=0.1)
+    decoded, stats = comp.roundtrip(tree)
+    flat, _ = ravel_pytree(tree)
+    dflat, _ = ravel_pytree(decoded)
+    k = max(1, int(flat.size * 0.1))
+    kept = int(jnp.sum(dflat != 0))
+    assert kept <= k
+    # every kept value is exact and among the top-k magnitudes
+    thresh = float(jnp.sort(jnp.abs(flat))[-k])
+    nz = np.nonzero(np.asarray(dflat))[0]
+    for i in nz:
+        assert float(dflat[i]) == pytest.approx(float(flat[i]))
+        assert abs(float(flat[i])) >= thresh - 1e-6
+    assert stats["compression_ratio"] > 4.0
+
+
+def test_fc_ae_compressor_shapes_and_ratio():
+    cfg = AEConfig(input_dim=512, encoder_hidden=(64,), latent_dim=16)
+    params = init_fc_ae(jax.random.PRNGKey(0), cfg)
+    tree = _tree(3, sizes=((20, 20), (50,)))      # 450 params < 512
+    comp = FCAECompressor(params, cfg)
+    decoded, stats = comp.roundtrip(tree)
+    assert jax.tree_util.tree_structure(decoded) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(decoded)):
+        assert a.shape == b.shape
+    # latent 16 floats + orig_len vs 450 floats
+    assert stats["compression_ratio"] > 20
+
+
+def test_chunked_ae_compressor_and_composed():
+    cfg = ChunkedAEConfig(chunk_size=128, hidden=(32,), latent_chunk=4)
+    params = init_chunked_ae(jax.random.PRNGKey(0), cfg)
+    tree = _tree(4, sizes=((40, 30), (200,)))
+    comp = ChunkedAECompressor(params, cfg)
+    decoded, stats = comp.roundtrip(tree)
+    assert stats["compression_ratio"] > 20       # 128/4 = 32x nominal
+    composed = ComposedCompressor(inner=comp, bits=8, block=64)
+    decoded2, stats2 = composed.roundtrip(tree)
+    assert stats2["compressed_bytes"] < stats["compressed_bytes"]
+    assert jax.tree_util.tree_structure(decoded2) == \
+        jax.tree_util.tree_structure(tree)
+
+
+@hypothesis.given(st.integers(1, 2000), st.integers(0, 10 ** 6))
+def test_property_quantize_roundtrip_any_length(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31), (n,)) * 2.0
+    comp = QuantizeCompressor(bits=8, block=128)
+    decoded, _ = comp.roundtrip({"w": x})
+    err = jnp.abs(decoded["w"] - x)
+    assert decoded["w"].shape == x.shape
+    assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+@hypothesis.given(st.floats(0.01, 0.5), st.integers(0, 10 ** 6))
+def test_property_topk_sparsity(frac, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31), (300,))
+    comp = TopKCompressor(fraction=frac)
+    decoded, _ = comp.roundtrip({"w": x})
+    k = max(1, int(300 * frac))
+    assert int(jnp.sum(decoded["w"] != 0)) <= k
+
+
+@hypothesis.given(st.integers(1, 5000), st.integers(1, 64))
+def test_property_chunking_bijection(n, latent):
+    """chunk → unchunk is the identity on any-length vectors."""
+    from repro.core.autoencoder import chunk_vector, unchunk_vector
+    x = jnp.arange(n, dtype=jnp.float32)
+    chunks, orig = chunk_vector(x, 64)
+    back = unchunk_vector(chunks, orig)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))

@@ -1,0 +1,119 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode kernel vs
+pure-jnp oracle (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoencoder import (ChunkedAEConfig, chunked_decode,
+                                    chunked_encode, init_chunked_ae)
+from repro.kernels import ops, ref
+from repro.kernels.fused_dense import fused_dense
+from repro.kernels.quantize import dequantize_blocks_2d, quantize_blocks_2d
+
+SHAPES = [(8, 16, 8), (100, 64, 32), (128, 128, 128), (257, 300, 65),
+          (1, 4096, 8)]
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["relu", "linear"])
+def test_fused_dense_sweep(M, K, N, dtype, act):
+    k = jax.random.PRNGKey(M * 1000 + K + N)
+    x = jax.random.normal(k, (M, K), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (K, N)) * K ** -0.5
+         ).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(2), (N,)).astype(dtype)
+    got = fused_dense(x, w, b, act=act, interpret=True)
+    want = ref.fused_dense_ref(x, w, b, act)
+    atol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("n_blocks,block", [(1, 64), (7, 256), (64, 128),
+                                            (300, 256)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantize_kernel_vs_ref(n_blocks, block, bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n_blocks, block)) * 3.0
+    q_k, s_k = quantize_blocks_2d(x, bits=bits, block=block, interpret=True)
+    q_r, s_r = ref.quantize_blocks_ref(x, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    d_k = dequantize_blocks_2d(q_k, s_k, block=block, interpret=True)
+    d_r = ref.dequantize_blocks_ref(q_r, s_r)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [100, 4096, 10000])
+def test_quantize_roundtrip_error_bound(bits, n):
+    """|x - deq(q(x))| <= scale/2 per block — the quantization invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 5.0
+    q, s, orig = ops.quantize_blocks(x, bits=bits, block=256)
+    back = ops.dequantize_blocks(q, s, bits=bits, block=256, orig_len=orig)
+    assert back.shape == x.shape
+    qmax = 2 ** (bits - 1) - 1
+    blocks, _ = jnp.asarray(x), None
+    pad = (-n) % 256
+    xp = jnp.pad(x, (0, pad)).reshape(-1, 256)
+    scale = jnp.max(jnp.abs(xp), 1) / qmax
+    err = jnp.abs((back - x)).reshape(-1)
+    per_block_bound = jnp.repeat(scale / 2 + 1e-6, 256)[:n]
+    assert bool(jnp.all(err <= per_block_bound))
+
+
+@pytest.mark.parametrize("chunk,hidden,latent", [(64, (32,), 4),
+                                                 (256, (64, 32), 8),
+                                                 (1024, (), 16)])
+@pytest.mark.parametrize("n", [100, 5000])
+def test_chunked_ae_kernel_matches_jnp(chunk, hidden, latent, n):
+    cfg = ChunkedAEConfig(chunk_size=chunk, hidden=hidden,
+                          latent_chunk=latent)
+    params = init_chunked_ae(jax.random.PRNGKey(0), cfg)
+    flat = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    z_k = ops.ae_encode(params, cfg, flat)
+    z_j = chunked_encode(params, cfg, flat)
+    np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_j), atol=1e-5,
+                               rtol=1e-4)
+    d_k = ops.ae_decode(params, cfg, z_k, n)
+    d_j = chunked_decode(params, cfg, z_j, n)
+    assert d_k.shape == (n,)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_j), atol=1e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [(1, 17, 2, 1, 16), (2, 64, 4, 2, 32),
+                                        (1, 130, 8, 8, 64)])
+@pytest.mark.parametrize("mode,window", [("causal", None), ("window", 13),
+                                         ("full", None)])
+def test_flash_attention_pallas_vs_oracle(B, S, H, KV, D, mode, window):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import flash_attention as flash_ref
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, D))
+    got = flash_attention_pallas(q, k, v, mode=mode, window=window,
+                                 q_block=32, kv_block=32, interpret=True)
+    want = flash_ref(q, k, v, mode=mode, window=window,
+                     q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_dtypes(dtype):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import flash_attention as flash_ref
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 48, 4, 32), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 48, 2, 32), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 48, 2, 32), dtype)
+    got = flash_attention_pallas(q, k, v, q_block=16, kv_block=16,
+                                 interpret=True)
+    want = flash_ref(q, k, v, q_chunk=16, kv_chunk=16)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 3e-5,
+                               rtol=2e-2)
