@@ -15,9 +15,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", default="all",
                     help="comma-separated table names (or 'all')")
+    ap.add_argument("--list", action="store_true",
+                    help="print available table names and exit")
     args = ap.parse_args()
 
     from benchmarks.tables import ALL_TABLES
+    if args.list:
+        for name, _ in ALL_TABLES:
+            print(name)
+        return
     selected = {t.strip() for t in args.tables.split(",")}
     print("name,us_per_call,derived")
     failures = 0

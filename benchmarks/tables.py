@@ -311,6 +311,67 @@ def table_kernels() -> List[Row]:
 
 
 # =====================================================================
+# scalable runtime (DESIGN.md §6) — scheduler wall-time + byte accounting
+# =====================================================================
+def table_fl_schedulers() -> List[Row]:
+    """Sync vs sampled(vmap) vs sampled(loop) vs async-buffered: per-round
+    wall time and total up/down traffic on the same 16-client federation.
+    The vmap-vs-loop pair is the §6.4 batching claim measured directly."""
+    from repro.configs.paper import MNIST_CLASSIFIER, SMOKE_SCALE_SCENARIO
+    from repro.core import (AsyncBuffered, FLConfig, FederatedRun,
+                            LatencyModel, SampledSync, SyncFedAvg)
+    from repro.data.pipeline import (mnist_like, train_eval_split,
+                                     uniform_partition)
+
+    sc = SMOKE_SCALE_SCENARIO
+    n_clients = sc.n_clients if FULL else 8
+    cohort = sc.cohort if FULL else 4
+    rounds = sc.rounds if FULL else 2
+    train, ev = train_eval_split(mnist_like(0, 2048 if FULL else 1024), 256)
+    # equal shards so sampled_vmap really measures the vmap path (a ragged
+    # dirichlet federation would silently fall back to the loop)
+    data = uniform_partition(0, train, n_clients)
+    cfg = FLConfig(n_rounds=rounds, local_epochs=1, lr=2e-3,
+                   payload="update")
+
+    schedulers = [
+        ("sync_fedavg", SyncFedAvg),
+        ("sampled_vmap", lambda: SampledSync(cohort=cohort, use_vmap=True)),
+        ("sampled_loop", lambda: SampledSync(cohort=cohort,
+                                             use_vmap=False)),
+        ("async_buffered", lambda: AsyncBuffered(
+            buffer_k=sc.buffer_k,
+            latency=LatencyModel(jitter=sc.latency_jitter,
+                                 straggler_frac=sc.straggler_frac,
+                                 straggler_mult=sc.straggler_mult))),
+    ]
+    rows: List[Row] = []
+    for name, make_sched in schedulers:
+        # warmup pass on a throwaway run so one-time jit compilation does
+        # not pollute the timed rounds (schedulers are one-run objects, so
+        # each pass gets a fresh instance)
+        warm_cfg = FLConfig(n_rounds=1, local_epochs=1, lr=2e-3,
+                            payload="update")
+        FederatedRun(MNIST_CLASSIFIER, data, warm_cfg, eval_data=ev,
+                     scheduler=make_sched()).run()
+        sched = make_sched()
+        run = FederatedRun(MNIST_CLASSIFIER, data, cfg, eval_data=ev,
+                           scheduler=sched)
+        t0 = time.perf_counter()
+        hist = run.run()
+        us_per_round = (time.perf_counter() - t0) / rounds * 1e6
+        tot = run.total_bytes()
+        vmap_note = ""
+        if isinstance(sched, SampledSync):
+            vmap_note = f" vmap_rounds={sched.vmap_rounds}/{rounds}"
+        rows.append((f"scheduler_{name}", us_per_round,
+                     f"acc={hist[-1].global_metrics['accuracy']:.3f} "
+                     f"up={tot['bytes_up'] / 1e3:.0f}kB "
+                     f"down={tot['bytes_down'] / 1e3:.0f}kB{vmap_note}"))
+    return rows
+
+
+# =====================================================================
 # roofline summary (reads the dry-run reports if present)
 # =====================================================================
 def table_roofline_summary() -> List[Row]:
@@ -343,5 +404,6 @@ ALL_TABLES = [
     ("conv_ae", table_conv_ae),
     ("codec_comparison", table_codec_comparison),
     ("kernels", table_kernels),
+    ("fl_schedulers", table_fl_schedulers),
     ("roofline_summary", table_roofline_summary),
 ]

@@ -95,3 +95,37 @@ CIFAR_AE = AEConfig(input_dim=550_570, encoder_hidden=(), latent_dim=320)
 def cifar_ae_for(n_params: int) -> AEConfig:
     """Paper-shaped CIFAR AE resized to the actual classifier param count."""
     return AEConfig(input_dim=n_params, encoder_hidden=(), latent_dim=320)
+
+
+# --- scalable-runtime scenarios (DESIGN.md §6) ------------------------------
+@dataclasses.dataclass(frozen=True)
+class FLRuntimeScenario:
+    """Knobs for one scalable-runtime experiment: N clients, a C-of-N
+    sampled cohort, a K-deep async buffer, and the latency distribution the
+    straggler scenario runs under. Consumed by examples/fl_async_sampling.py
+    and the ``fl_schedulers`` benchmark table; the numbers themselves plug
+    into ``SampledSync``/``AsyncBuffered``/``LatencyModel``
+    (repro.core.scheduler)."""
+
+    n_clients: int
+    cohort: int                       # SampledSync: C of N per round
+    buffer_k: int                     # AsyncBuffered: aggregate first K
+    rounds: int
+    local_epochs: int = 1
+    base_latency: float = 1.0
+    latency_jitter: float = 0.5       # multiplicative U[1±j]
+    straggler_frac: float = 0.0       # tail of straggler_mult-slower clients
+    straggler_mult: float = 8.0
+
+
+# Paper Fig. 10 works at ~1000 collaborators / ~40 rounds; this is that
+# regime for byte-accounting analytics (not meant to be trained on CPU).
+PAPER_SCALE_SCENARIO = FLRuntimeScenario(
+    n_clients=1000, cohort=100, buffer_k=50, rounds=40, local_epochs=5,
+    straggler_frac=0.1)
+
+# CPU-trainable smoke version of the same shape: 16 clients, quarter
+# cohorts, a 25% straggler tail — runs in ~a minute in the example.
+SMOKE_SCALE_SCENARIO = FLRuntimeScenario(
+    n_clients=16, cohort=4, buffer_k=4, rounds=3,
+    straggler_frac=0.25)

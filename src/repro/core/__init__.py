@@ -1,6 +1,12 @@
 """The paper's primary contribution: autoencoder-compressed weight-update
 communication for federated learning, as a composable JAX library."""
-from repro.core.aggregate import apply_update, fedavg, weighted_mean  # noqa: F401
+from repro.core.aggregate import (  # noqa: F401
+    apply_update,
+    buffered_aggregate,
+    fedavg,
+    staleness_weights,
+    weighted_mean,
+)
 from repro.core.autoencoder import (  # noqa: F401
     ChunkedAEConfig,
     ConvAEConfig,
@@ -28,6 +34,9 @@ from repro.core.compressor import (  # noqa: F401
     IdentityCompressor,
     QuantizeCompressor,
     TopKCompressor,
+    ef_compensate,
+    ef_residual,
+    tree_bytes,
 )
 from repro.core.federated import (  # noqa: F401
     FLConfig,
@@ -35,5 +44,18 @@ from repro.core.federated import (  # noqa: F401
     RoundRecord,
     validation_model_curve,
 )
-from repro.core.prepass import evaluate, local_train, run_prepass  # noqa: F401
+from repro.core.prepass import (  # noqa: F401
+    evaluate,
+    local_train,
+    local_train_batched,
+    run_prepass,
+)
+from repro.core.scheduler import (  # noqa: F401
+    AsyncBuffered,
+    ClientState,
+    LatencyModel,
+    RoundScheduler,
+    SampledSync,
+    SyncFedAvg,
+)
 from repro.core.savings import SavingsModel, sweep_collaborators, sweep_rounds  # noqa: F401

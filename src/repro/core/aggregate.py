@@ -44,3 +44,30 @@ def fedavg(global_params: Pytree, updates: Sequence[Pytree],
            server_lr: float = 1.0) -> Pytree:
     return apply_update(global_params, weighted_mean(updates, weights),
                         server_lr)
+
+
+def staleness_weights(base_weights: Sequence[float],
+                      staleness: Sequence[int],
+                      power: float = 0.5) -> List[float]:
+    """FedBuff-style staleness discounting (Nguyen et al., 2022).
+
+    An update computed against global version ``v`` but applied at version
+    ``v + s`` is down-weighted by ``(1 + s) ** -power``; ``power=0`` recovers
+    plain sample-count weighting so a zero-staleness buffered round is exactly
+    FedAvg (DESIGN.md §6.2). The weights are renormalized inside
+    :func:`weighted_mean`, so only the *relative* discount matters."""
+    assert len(base_weights) == len(staleness)
+    return [w * float(1 + s) ** (-power)
+            for w, s in zip(base_weights, staleness)]
+
+
+def buffered_aggregate(global_params: Pytree, updates: Sequence[Pytree],
+                       base_weights: Sequence[float],
+                       staleness: Sequence[int], *,
+                       power: float = 0.5,
+                       server_lr: float = 1.0) -> Pytree:
+    """One async buffer flush: staleness-discounted FedAvg over the first K
+    arrivals (the buffer contents)."""
+    return fedavg(global_params, updates,
+                  staleness_weights(base_weights, staleness, power),
+                  server_lr)

@@ -252,7 +252,9 @@ def train_autoencoder(
     kind: str = "fc",
     epochs: int = 200,
     batch_size: int = 8,
-    lr: float = 1e-3,
+    lr: float = 3e-3,    # weight-vector AEs train on tiny datasets (tens of
+                         # snapshots); 1e-3 underfits within the CI epoch
+                         # budget — see §Perf iteration log in DESIGN.md
     val_fraction: float = 0.2,
     init: Optional[Params] = None,
 ) -> Tuple[Params, Dict[str, list]]:

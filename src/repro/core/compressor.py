@@ -32,9 +32,32 @@ from repro.core import autoencoder as ae
 Pytree = Any
 
 
-def _nbytes(tree: Pytree) -> int:
+def tree_bytes(tree: Pytree) -> int:
+    """Wire size of a pytree payload: sum of leaf nbytes. Used for both
+    uplink (compressed payloads) and downlink (global-model broadcast)
+    accounting in the scheduler layer (DESIGN.md §6)."""
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(tree))
+
+
+_nbytes = tree_bytes
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (DGC/EF-SGD style, beyond paper): the per-client residual is
+# *compressor state* owned by the scheduler's ClientState so it survives
+# rounds where the client is not sampled (DESIGN.md §6.3).
+# ---------------------------------------------------------------------------
+def ef_compensate(payload: Pytree, residual: Optional[Pytree]) -> Pytree:
+    """Fold the previous round's reconstruction residual into this payload."""
+    if residual is None:
+        return payload
+    return jax.tree_util.tree_map(lambda u, res: u + res, payload, residual)
+
+
+def ef_residual(payload: Pytree, decoded: Pytree) -> Pytree:
+    """What the codec lost this round: kept locally, re-sent next round."""
+    return jax.tree_util.tree_map(lambda u, d: u - d, payload, decoded)
 
 
 class Compressor:

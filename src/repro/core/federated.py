@@ -6,6 +6,14 @@ weight *update* (local − global) is encoded by the collaborator-side encoder,
 "communicated" (byte-accounted), decoded server-side, and FedAvg'd into the
 next global model. Error feedback (beyond paper, DGC-style) optionally keeps
 the reconstruction residual local and folds it into the next round's update.
+
+Round *orchestration* is delegated to a pluggable ``RoundScheduler``
+(DESIGN.md §6): the default ``SyncFedAvg`` reproduces the original
+all-clients-every-round loop bit-for-bit, while ``SampledSync`` (C-of-N
+cohorts, vmap-batched local training) and ``AsyncBuffered`` (FedBuff-style
+staleness-weighted buffering over a simulated latency model) open the
+partial-participation and straggler scenario families the paper's
+large-scale analysis (Fig. 10) assumes. See examples/fl_async_sampling.py.
 """
 from __future__ import annotations
 
@@ -17,9 +25,9 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.paper import ClassifierConfig
-from repro.core.aggregate import fedavg, weighted_mean
 from repro.core.compressor import Compressor, IdentityCompressor
-from repro.core.prepass import evaluate, local_train
+from repro.core.prepass import evaluate
+from repro.core.scheduler import ClientState, RoundScheduler, SyncFedAvg
 from repro.models.classifiers import init_classifier
 
 Pytree = Any
@@ -53,10 +61,23 @@ class RoundRecord:
     bytes_up: float                    # collaborator→server this round
     bytes_up_raw: float                # uncompressed equivalent
     compression_ratio: float
+    # scheduler-layer accounting (DESIGN.md §6.1). Downlink is the global-
+    # model broadcast to each participant — uncompressed in this scheme, so
+    # bytes_down == bytes_down_raw today; both are kept so a compressed-
+    # broadcast codec slots in without a record change.
+    bytes_down: float = 0.0            # server→collaborator this round
+    bytes_down_raw: float = 0.0
+    participants: Optional[List[int]] = None    # client ids in this round
+    staleness: Optional[List[int]] = None       # async only, per participant
+    sim_time: float = 0.0              # async only: simulated clock
 
 
 class FederatedRun:
-    """One FL experiment over the paper's small collaborator models."""
+    """One FL experiment over the paper's small collaborator models.
+
+    ``scheduler`` selects the orchestration policy; ``SyncFedAvg`` (default)
+    is the seed behavior. Per-client state (error-feedback residuals, model
+    versions) lives in ``self.clients`` and is shared across schedulers."""
 
     def __init__(
         self,
@@ -65,6 +86,7 @@ class FederatedRun:
         fl_cfg: FLConfig,
         compressors: Optional[Sequence[Compressor]] = None,
         eval_data: Optional[Dict[str, jnp.ndarray]] = None,
+        scheduler: Optional[RoundScheduler] = None,
     ):
         self.clf_cfg = clf_cfg
         self.datasets = list(datasets)
@@ -77,61 +99,24 @@ class FederatedRun:
         self.eval_data = eval_data
         self.global_params = init_classifier(
             jax.random.PRNGKey(fl_cfg.seed), clf_cfg)
-        self._residuals: List[Optional[Pytree]] = [None] * n
+        self.clients = [ClientState() for _ in range(n)]
         self.history: List[RoundRecord] = []
+        self.scheduler = scheduler if scheduler is not None else SyncFedAvg()
+        self.scheduler.bind(self)
+
+    @property
+    def _residuals(self) -> List[Optional[Pytree]]:
+        """Back-compat READ-ONLY snapshot of the per-client error-feedback
+        residuals. Writing to this list mutates a throwaway copy; assign
+        ``run.clients[i].residual`` to change a client's residual."""
+        return [c.residual for c in self.clients]
 
     # ------------------------------------------------------------------
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
             ) -> List[RoundRecord]:
-        cfg = self.cfg
-        for r in range(cfg.n_rounds):
-            updates, weights, metrics = [], [], []
-            bytes_up = bytes_raw = 0.0
-            ratios = []
-            for ci, data in enumerate(self.datasets):
-                local, _, hist = local_train(
-                    self.global_params, self.clf_cfg, data,
-                    epochs=cfg.local_epochs, lr=cfg.lr,
-                    batch_size=cfg.batch_size, seed=cfg.seed * 997 + r,
-                    optimizer=cfg.optimizer,
-                    prox_mu=(cfg.prox_mu
-                             if cfg.aggregation == "fedprox" else 0.0),
-                    anchor=self.global_params)
-                if cfg.payload == "weights":
-                    payload = local               # paper §5.2 protocol
-                else:
-                    payload = jax.tree_util.tree_map(
-                        lambda a, b: a - b, local, self.global_params)
-                if cfg.error_feedback and self._residuals[ci] is not None:
-                    payload = jax.tree_util.tree_map(
-                        lambda u, res: u + res, payload,
-                        self._residuals[ci])
-
-                decoded, stats = self.compressors[ci].roundtrip(payload)
-                if cfg.error_feedback:
-                    self._residuals[ci] = jax.tree_util.tree_map(
-                        lambda u, d: u - d, payload, decoded)
-                if cfg.payload == "weights":
-                    # aggregation averages weights: express as an update
-                    decoded = jax.tree_util.tree_map(
-                        lambda w, g: w - g, decoded, self.global_params)
-                updates.append(decoded)
-                weights.append(float(data["x"].shape[0]))
-                bytes_up += stats["compressed_bytes"]
-                bytes_raw += stats["original_bytes"]
-                ratios.append(stats["compression_ratio"])
-                metrics.append(hist[-1] if hist else {})
-
-            self.global_params = fedavg(self.global_params, updates,
-                                        weights, cfg.server_lr)
-            gmetrics = {}
-            if self.eval_data is not None:
-                gmetrics = evaluate(self.global_params, self.clf_cfg,
-                                    self.eval_data)
-            rec = RoundRecord(
-                round=r, collab_metrics=metrics, global_metrics=gmetrics,
-                bytes_up=bytes_up, bytes_up_raw=bytes_raw,
-                compression_ratio=float(jnp.mean(jnp.array(ratios))))
+        start = len(self.history)          # run() is resumable
+        for r in range(start, start + self.cfg.n_rounds):
+            rec = self.scheduler.run_round(r)
             self.history.append(rec)
             if progress:
                 progress(rec)
@@ -141,7 +126,10 @@ class FederatedRun:
     def total_bytes(self) -> Dict[str, float]:
         up = sum(r.bytes_up for r in self.history)
         raw = sum(r.bytes_up_raw for r in self.history)
+        down = sum(r.bytes_down for r in self.history)
         return {"bytes_up": up, "bytes_up_raw": raw,
+                "bytes_down": down,
+                "bytes_total": up + down,
                 "effective_ratio": raw / max(up, 1.0)}
 
 

@@ -1,0 +1,381 @@
+"""Pluggable round schedulers: the scalable federated runtime (DESIGN.md §6).
+
+The seed's ``FederatedRun`` hard-wired one policy — every collaborator trains
+every round, sequentially, with only uplink bytes accounted. At the paper's
+target scale (hundreds-to-thousands of collaborators, Fig. 10) the levers
+that make compressed-update schemes pay off are *client sampling* and
+*asynchronous/buffered aggregation* (Shahid et al., 2021; Nguyen et al.,
+2022), so round orchestration is now a strategy object:
+
+* :class:`SyncFedAvg`     — the seed behavior, preserved bit-for-bit; the
+  default scheduler of ``FederatedRun``.
+* :class:`SampledSync`    — C-of-N cohort per round (McMahan et al., 2017's
+  ``C`` fraction), with the homogeneous-cohort hot path batched through
+  ``jax.vmap`` (one jitted call instead of C Python-loop invocations) and
+  downlink/global-broadcast bytes accounted alongside uplink.
+* :class:`AsyncBuffered`  — FedBuff-style: a simulated-latency event loop
+  delivers client updates to a server buffer; the first K arrivals are
+  staleness-weight aggregated, then those clients are re-dispatched with the
+  new global model. Stragglers are a first-class scenario via
+  :class:`LatencyModel`.
+
+Per-client compressor state (the error-feedback residual) lives in
+:class:`ClientState`, owned by the run and threaded through whichever
+scheduler is active — a residual survives rounds where its client is not
+sampled (DESIGN.md §6.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import buffered_aggregate, fedavg
+from repro.core.compressor import ef_compensate, ef_residual, tree_bytes
+from repro.core.prepass import evaluate, local_train, local_train_batched
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ClientState:
+    """Server-side bookkeeping for one collaborator.
+
+    ``residual`` is the error-feedback compressor state (DESIGN.md §6.3);
+    ``version`` is the global-model version the client last received;
+    ``dispatched`` holds the global params shipped at dispatch time (async
+    only — the client trains against this possibly-stale snapshot)."""
+
+    residual: Optional[Pytree] = None
+    version: int = 0
+    dispatched: Optional[Pytree] = None
+
+
+def _client_round(run, ci: int, global_params: Pytree, round_seed: int
+                  ) -> Tuple[Pytree, float, Dict[str, float],
+                             Dict[str, float]]:
+    """One collaborator's full local round against ``global_params``: train,
+    build the payload (weights or update), error-feedback compensate,
+    codec roundtrip, convert to an update. Operation order is identical to
+    the seed ``FederatedRun.run`` body so ``SyncFedAvg`` reproduces it
+    bit-for-bit. Returns (decoded update, sample weight, codec stats,
+    final-epoch metrics)."""
+    cfg = run.cfg
+    data = run.datasets[ci]
+    state = run.clients[ci]
+    local, _, hist = local_train(
+        global_params, run.clf_cfg, data,
+        epochs=cfg.local_epochs, lr=cfg.lr,
+        batch_size=cfg.batch_size, seed=round_seed,
+        optimizer=cfg.optimizer,
+        prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
+        anchor=global_params)
+    return _encode_local(run, ci, local, global_params, state,
+                         hist[-1] if hist else {})
+
+
+def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
+                  state: ClientState, metrics: Dict[str, float]
+                  ) -> Tuple[Pytree, float, Dict[str, float],
+                             Dict[str, float]]:
+    """Payload selection + error feedback + codec roundtrip for an
+    already-trained ``local`` model (shared by the loop and vmap paths)."""
+    cfg = run.cfg
+    if cfg.payload == "weights":
+        payload = local                    # paper §5.2 protocol
+    else:
+        payload = jax.tree_util.tree_map(
+            lambda a, b: a - b, local, global_params)
+    if cfg.error_feedback:
+        payload = ef_compensate(payload, state.residual)
+
+    decoded, stats = run.compressors[ci].roundtrip(payload)
+    if cfg.error_feedback:
+        state.residual = ef_residual(payload, decoded)
+    if cfg.payload == "weights":
+        # aggregation averages updates: express weights as an update
+        decoded = jax.tree_util.tree_map(
+            lambda w, g: w - g, decoded, global_params)
+    weight = float(run.datasets[ci]["x"].shape[0])
+    return decoded, weight, stats, metrics
+
+
+def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
+                   **extra):
+    """Evaluate the (already-updated) global model and build a RoundRecord."""
+    from repro.core.federated import RoundRecord
+    gmetrics = {}
+    if run.eval_data is not None:
+        gmetrics = evaluate(run.global_params, run.clf_cfg, run.eval_data)
+    return RoundRecord(
+        round=r, collab_metrics=metrics, global_metrics=gmetrics,
+        bytes_up=bytes_up, bytes_up_raw=bytes_raw,
+        compression_ratio=float(jnp.mean(jnp.array(ratios))), **extra)
+
+
+class RoundScheduler:
+    """Strategy interface: one ``run_round`` call advances the federation by
+    one aggregation and returns its ``RoundRecord``."""
+
+    name = "base"
+
+    def bind(self, run) -> None:
+        """Attach to a ``FederatedRun`` (gives access to cfg/datasets/
+        compressors/global_params/clients). Called once from its ctor —
+        a scheduler instance carries per-run state (counters, buffers), so
+        each run needs its own."""
+        assert getattr(self, "run", None) is None, (
+            "scheduler is already bound to a FederatedRun; create a fresh "
+            "scheduler instance per run")
+        self.run = run
+
+    def run_round(self, r: int):
+        raise NotImplementedError
+
+
+class SyncFedAvg(RoundScheduler):
+    """The seed behavior: every collaborator trains every round; FedAvg over
+    all updates. Downlink accounting is new (the seed tracked uplink only)
+    but the seed fields — metrics, bytes_up, compression_ratio — are
+    reproduced bit-for-bit for a fixed seed."""
+
+    name = "sync_fedavg"
+
+    def run_round(self, r: int):
+        run, cfg = self.run, self.run.cfg
+        model_bytes = float(tree_bytes(run.global_params))
+        updates, weights, metrics = [], [], []
+        bytes_up = bytes_raw = 0.0
+        ratios = []
+        for ci in range(len(run.datasets)):
+            decoded, w, stats, m = _client_round(
+                run, ci, run.global_params, cfg.seed * 997 + r)
+            updates.append(decoded)
+            weights.append(w)
+            bytes_up += stats["compressed_bytes"]
+            bytes_raw += stats["original_bytes"]
+            ratios.append(stats["compression_ratio"])
+            metrics.append(m)
+        run.global_params = fedavg(run.global_params, updates, weights,
+                                   cfg.server_lr)
+        n = len(run.datasets)
+        return _finish_record(
+            run, r, metrics, bytes_up, bytes_raw, ratios,
+            bytes_down=model_bytes * n, bytes_down_raw=model_bytes * n,
+            participants=list(range(n)))
+
+
+@dataclasses.dataclass
+class SampledSync(RoundScheduler):
+    """Partial participation: each round samples a cohort of ``cohort``-of-N
+    clients without replacement (McMahan et al., 2017), broadcasts the global
+    model to exactly that cohort (downlink accounted per sampled client), and
+    FedAvgs their compressed updates. Unsampled clients keep their
+    error-feedback residual untouched.
+
+    With ``use_vmap`` (default) and a homogeneous cohort — every sampled
+    client's dataset has identical shapes, as produced by equal-sized
+    partitions — local training for the whole cohort is one jitted
+    ``vmap(step)`` sweep instead of ``cohort`` sequential ``local_train``
+    calls (DESIGN.md §6.4). Ragged cohorts fall back to the loop."""
+
+    cohort: int = 2
+    sample_seed: int = 0
+    use_vmap: bool = True
+    name: str = "sampled_sync"
+    # observability: rounds that actually took the vmap fast path vs fell
+    # back to the loop (ragged cohort) — asserted on in tests, reported by
+    # the fl_schedulers benchmark
+    vmap_rounds: int = dataclasses.field(default=0, init=False)
+    loop_rounds: int = dataclasses.field(default=0, init=False)
+
+    def sampled(self, r: int) -> List[int]:
+        n = len(self.run.datasets)
+        c = min(self.cohort, n)
+        rng = np.random.RandomState((self.sample_seed * 100003 + r) % 2 ** 31)
+        return sorted(rng.choice(n, size=c, replace=False).tolist())
+
+    def _cohort_locals(self, cohort: List[int], r: int) -> Optional[list]:
+        """vmap fast path: returns per-client trained params, or None when
+        the cohort is ragged (shapes differ) and the loop must be used."""
+        run, cfg = self.run, self.run.cfg
+        if not self.use_vmap or len(cohort) < 2:
+            return None
+        shapes = [jax.tree_util.tree_map(lambda x: x.shape,
+                                         run.datasets[ci]) for ci in cohort]
+        if any(s != shapes[0] for s in shapes[1:]):
+            return None
+        stacked_data = {
+            k: jnp.stack([run.datasets[ci][k] for ci in cohort])
+            for k in run.datasets[cohort[0]]}
+        stacked, _metrics = local_train_batched(
+            run.global_params, run.clf_cfg, stacked_data,
+            epochs=cfg.local_epochs, lr=cfg.lr, batch_size=cfg.batch_size,
+            seed=cfg.seed * 997 + r, optimizer=cfg.optimizer,
+            prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
+            anchor=run.global_params)
+        locals_ = [jax.tree_util.tree_map(lambda x, i=i: x[i], stacked)
+                   for i in range(len(cohort))]
+        return list(zip(locals_, _metrics))
+
+    def run_round(self, r: int):
+        run, cfg = self.run, self.run.cfg
+        cohort = self.sampled(r)
+        model_bytes = float(tree_bytes(run.global_params))
+        batched = self._cohort_locals(cohort, r)
+        if batched is not None:
+            self.vmap_rounds += 1
+        else:
+            self.loop_rounds += 1
+
+        updates, weights, metrics = [], [], []
+        bytes_up = bytes_raw = 0.0
+        ratios = []
+        for k, ci in enumerate(cohort):
+            run.clients[ci].version = r
+            if batched is not None:
+                local, m = batched[k]
+                decoded, w, stats, m = _encode_local(
+                    run, ci, local, run.global_params, run.clients[ci], m)
+            else:
+                decoded, w, stats, m = _client_round(
+                    run, ci, run.global_params, cfg.seed * 997 + r)
+            updates.append(decoded)
+            weights.append(w)
+            bytes_up += stats["compressed_bytes"]
+            bytes_raw += stats["original_bytes"]
+            ratios.append(stats["compression_ratio"])
+            metrics.append(m)
+        run.global_params = fedavg(run.global_params, updates, weights,
+                                   cfg.server_lr)
+        c = len(cohort)
+        return _finish_record(
+            run, r, metrics, bytes_up, bytes_raw, ratios,
+            bytes_down=model_bytes * c, bytes_down_raw=model_bytes * c,
+            participants=cohort)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Deterministic per-(client, dispatch) round-trip latency: train +
+    uplink time in abstract simulation units. A ``straggler_frac`` tail of
+    clients is ``straggler_mult``× slower — the scenario buffered
+    aggregation exists to survive. ``jitter`` is the uniform multiplicative
+    half-width (0 ⇒ every dispatch of a client takes exactly ``base``)."""
+
+    base: float = 1.0
+    jitter: float = 0.0                # latency ~ base * U[1-j, 1+j]
+    straggler_frac: float = 0.0        # first ceil(frac*N) clients are slow
+    straggler_mult: float = 10.0
+    seed: int = 0
+
+    def is_straggler(self, client: int, n_clients: int) -> bool:
+        return client < int(np.ceil(self.straggler_frac * n_clients))
+
+    def sample(self, client: int, dispatch: int, n_clients: int) -> float:
+        lat = self.base
+        if self.jitter > 0.0:
+            rng = np.random.RandomState(
+                (self.seed * 7919 + client * 104729 + dispatch) % 2 ** 31)
+            lat *= 1.0 + self.jitter * (2.0 * rng.rand() - 1.0)
+        if self.is_straggler(client, n_clients):
+            lat *= self.straggler_mult
+        return float(lat)
+
+
+@dataclasses.dataclass
+class AsyncBuffered(RoundScheduler):
+    """FedBuff-style buffered asynchronous aggregation (Nguyen et al., 2022).
+
+    All clients are dispatched at t=0 with the v0 global model. A simulated
+    event loop (priority queue on arrival time, FIFO tie-break) delivers
+    trained+compressed updates; each ``run_round`` drains the first
+    ``buffer_k`` arrivals, aggregates them with staleness-discounted weights
+    ``w_i * (1 + s_i) ** -staleness_power`` where ``s_i`` is how many global
+    versions elapsed while client i was training, bumps the global version,
+    and re-dispatches exactly those clients with the new model (downlink
+    accounted at dispatch, attributed to the next round's record).
+
+    With ``buffer_k == n_clients`` and a zero-jitter, straggler-free
+    ``LatencyModel``, every round drains all clients at staleness 0 and the
+    trajectory equals :class:`SyncFedAvg` (tested). Training is computed
+    lazily at arrival, against the global snapshot stored at dispatch, with
+    local-train seed keyed to the dispatch version — stale clients train on
+    stale models, as in a real deployment."""
+
+    buffer_k: int = 2
+    latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
+    staleness_power: float = 0.5
+    name: str = "async_buffered"
+
+    def bind(self, run) -> None:
+        super().bind(run)
+        self._heap: List[Tuple[float, int, int]] = []   # (arrival, seq, ci)
+        self._seq = 0                                   # FIFO tie-break
+        self._version = 0                               # server model version
+        self._clock = 0.0
+        self._pending_down = 0.0    # downlink dispatched, not yet recorded
+        # clients whose re-dispatch is deferred to the next run_round: this
+        # keeps every broadcast byte attributed to a RoundRecord (nothing is
+        # shipped after the final aggregation, matching SyncFedAvg which
+        # never re-broadcasts the final model)
+        self._to_redispatch: List[int] = []
+        for ci in range(len(run.datasets)):
+            self._dispatch(ci)
+
+    def _dispatch(self, ci: int) -> None:
+        run = self.run
+        state = run.clients[ci]
+        state.version = self._version
+        state.dispatched = run.global_params
+        self._pending_down += float(tree_bytes(run.global_params))
+        lat = self.latency.sample(ci, self._version, len(run.datasets))
+        heapq.heappush(self._heap, (self._clock + lat, self._seq, ci))
+        self._seq += 1
+
+    def run_round(self, r: int):
+        run, cfg = self.run, self.run.cfg
+        for ci in self._to_redispatch:     # deferred from the previous flush
+            self._dispatch(ci)
+        self._to_redispatch = []
+        k = min(self.buffer_k, len(self._heap))
+        assert k > 0, "async scheduler has no in-flight clients"
+        bytes_down = self._pending_down
+        self._pending_down = 0.0
+
+        updates, weights, stales, metrics = [], [], [], []
+        arrived: List[int] = []
+        bytes_up = bytes_raw = 0.0
+        ratios = []
+        for _ in range(k):
+            t, _, ci = heapq.heappop(self._heap)
+            self._clock = max(self._clock, t)
+            state = run.clients[ci]
+            # train lazily, against the (possibly stale) dispatched snapshot
+            decoded, w, stats, m = _client_round(
+                run, ci, state.dispatched, cfg.seed * 997 + state.version)
+            updates.append(decoded)
+            weights.append(w)
+            stales.append(self._version - state.version)
+            arrived.append(ci)
+            bytes_up += stats["compressed_bytes"]
+            bytes_raw += stats["original_bytes"]
+            ratios.append(stats["compression_ratio"])
+            metrics.append(m)
+
+        run.global_params = buffered_aggregate(
+            run.global_params, updates, weights, stales,
+            power=self.staleness_power, server_lr=cfg.server_lr)
+        self._version += 1
+        for ci in arrived:                 # re-dispatch with the new model,
+            state = run.clients[ci]        # deferred to the next round so
+            state.dispatched = None        # its downlink lands in a record
+        self._to_redispatch = list(arrived)
+        return _finish_record(
+            run, r, metrics, bytes_up, bytes_raw, ratios,
+            bytes_down=bytes_down, bytes_down_raw=bytes_down,
+            participants=arrived, staleness=stales, sim_time=self._clock)

@@ -108,14 +108,39 @@ def dirichlet_partition(seed: int, data: Dict[str, jnp.ndarray],
     return out
 
 
+def uniform_partition(seed: int, data: Dict[str, jnp.ndarray],
+                      n_clients: int) -> List[Dict[str, jnp.ndarray]]:
+    """Equal-sized IID shards (shuffle, then split evenly; the remainder is
+    dropped). This is the homogeneous-cohort layout the vmap scheduler hot
+    path requires — every shard has identical shapes, so ``SampledSync``
+    batches the whole cohort in one jitted call (DESIGN.md §6.4). Use
+    ``dirichlet_partition`` instead when label skew matters more than
+    throughput."""
+    rng = np.random.RandomState(seed)
+    n = data["x"].shape[0]
+    order = rng.permutation(n)
+    per = n // n_clients
+    assert per > 0, "fewer samples than clients"
+    return [{k: v[order[i * per:(i + 1) * per]] for k, v in data.items()}
+            for i in range(n_clients)]
+
+
+def batch_indices(seed: int, n: int, batch_size: int
+                  ) -> Iterator[np.ndarray]:
+    """One epoch of shuffled batch index arrays (partial tail batch
+    dropped). Single source of truth for batch order: both the sequential
+    ``local_train`` (via :func:`batches`) and the vmapped
+    ``local_train_batched`` consume this, which is what makes the two
+    training paths equivalent for a shared seed (DESIGN.md §6.4)."""
+    order = np.random.RandomState(seed).permutation(n)
+    for i in range(0, n - batch_size + 1, batch_size):
+        yield order[i:i + batch_size]
+
+
 def batches(seed: int, data: Dict[str, jnp.ndarray], batch_size: int
             ) -> Iterator[Dict[str, jnp.ndarray]]:
     """One epoch of shuffled minibatches."""
-    n = data["x"].shape[0]
-    rng = np.random.RandomState(seed)
-    order = rng.permutation(n)
-    for i in range(0, n - batch_size + 1, batch_size):
-        sel = order[i:i + batch_size]
+    for sel in batch_indices(seed, data["x"].shape[0], batch_size):
         yield {"x": data["x"][sel], "y": data["y"][sel]}
 
 

@@ -1,0 +1,57 @@
+"""Fallback for the optional ``hypothesis`` dependency (the ``dev`` extra in
+pyproject.toml).
+
+A bare ``pytest.importorskip("hypothesis")`` at module scope would skip the
+*entire* test module, losing its plain unit tests too. Instead, modules that
+mix unit and property tests do::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import hypothesis, st
+
+With the stub bound, ``@hypothesis.given(...)`` marks just the property
+tests as skipped (same effect importorskip has, scoped per-test), while the
+unit tests in the same file still collect and run. The stub mirrors exactly
+the slice of the hypothesis API these tests touch: ``given``, ``settings``
+profiles, ``HealthCheck``, and arbitrary ``st.<strategy>(...)`` calls.
+"""
+import pytest
+
+
+class _Settings:
+    """No-op stand-ins for hypothesis.settings profile management."""
+
+    def __call__(self, *args, **kwargs):            # @hypothesis.settings(...)
+        return lambda fn: fn
+
+    @staticmethod
+    def register_profile(*args, **kwargs):
+        pass
+
+    @staticmethod
+    def load_profile(*args, **kwargs):
+        pass
+
+
+class _Hypothesis:
+    settings = _Settings()
+    HealthCheck = ()                    # list(HealthCheck) → []
+
+    @staticmethod
+    def given(*args, **kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e '.[dev]')")
+
+
+class _Strategies:
+    """Any st.integers()/st.floats()/st.sampled_from()/... returns None —
+    the value is never used because ``given`` skips the test."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+hypothesis = _Hypothesis()
+st = _Strategies()
