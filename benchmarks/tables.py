@@ -372,6 +372,88 @@ def table_fl_schedulers() -> List[Row]:
 
 
 # =====================================================================
+# batched server decode→aggregate (DESIGN.md §7) — per-client loop vs
+# one-call vmap vs fused Pallas kernel vs shard_map, across cohort sizes
+# =====================================================================
+def table_fl_decode_agg() -> List[Row]:
+    """The aggregator's round hot path measured directly: decode one
+    ChunkedAE payload per cohort client and FedAvg the results. ``loop`` is
+    the seed server (per-client decode dispatch + Python accumulation);
+    ``fused`` is one jitted ``codec.decode_and_aggregate`` (vmap-batched
+    decode + einsum on the jnp path, the Pallas fused decode→aggregate
+    kernel on the kernel path); ``shard_map`` splits the client axis over
+    the local device mesh (1 device on CPU CI — measures dispatch, not
+    scaling). On CPU the kernels run in interpret mode."""
+    from repro.core import codec, normalize_weights
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
+
+    def _timeit_min(fn, n: int = 5) -> float:
+        """Best-of-n (not mean): server-path dispatch costs are what we
+        compare, and min is robust to CI scheduler noise."""
+        fn()                               # warmup / compile
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    model = (1 << 20) if FULL else (1 << 15)          # flat update length
+    cfg = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
+    params = init_chunked_ae(jax.random.PRNGKey(0), cfg)
+    jnp_spec = None
+    rows: List[Row] = []
+    for cohort in (8, 64, 256):
+        comp_spec = codec.ChunkedAESpec(size=model, cfg=cfg,
+                                        use_kernel=True)
+        jnp_spec = codec.ChunkedAESpec(size=model, cfg=cfg,
+                                       use_kernel=False)
+        flat = jax.random.normal(jax.random.PRNGKey(1), (model,))
+        payloads = [codec.encode(jnp_spec, params, flat * (1 + 0.01 * i))
+                    for i in range(cohort)]
+        stacked = codec.stack_payloads(payloads)
+        weights = normalize_weights([float(i + 1) for i in range(cohort)])
+        nw = jnp.asarray(weights, jnp.float32)
+
+        def loop():                        # the seed server path
+            acc = jnp.zeros((model,), jnp.float32)
+            for w, p in zip(weights, payloads):
+                acc = acc + w * codec.decode(jnp_spec, params, p)
+            return jax.block_until_ready(acc)
+
+        def batched():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate(jnp_spec, params, stacked, nw))
+
+        def fused():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate(comp_spec, params, stacked, nw))
+
+        def sharded():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate_sharded(jnp_spec, params,
+                                                   stacked, nw))
+
+        t_loop = _timeit_min(loop)
+        t_batch = _timeit_min(batched)
+        t_fused = _timeit_min(fused)
+        t_shard = _timeit_min(sharded)
+        rows += [
+            (f"decode_agg_loop_c{cohort}", t_loop,
+             f"per-client dispatch x{cohort}"),
+            (f"decode_agg_vmap_c{cohort}", t_batch,
+             f"speedup={t_loop / max(t_batch, 1e-9):.1f}x vs loop"),
+            (f"decode_agg_fused_c{cohort}", t_fused,
+             f"speedup={t_loop / max(t_fused, 1e-9):.1f}x vs loop "
+             f"(pallas kernel{', interpret' if jax.default_backend() != 'tpu' else ''})"),
+            (f"decode_agg_shard_c{cohort}", t_shard,
+             f"speedup={t_loop / max(t_shard, 1e-9):.1f}x vs loop "
+             f"({len(jax.devices())} dev)"),
+        ]
+    return rows
+
+
+# =====================================================================
 # roofline summary (reads the dry-run reports if present)
 # =====================================================================
 def table_roofline_summary() -> List[Row]:
@@ -405,5 +487,6 @@ ALL_TABLES = [
     ("codec_comparison", table_codec_comparison),
     ("kernels", table_kernels),
     ("fl_schedulers", table_fl_schedulers),
+    ("fl_decode_agg", table_fl_decode_agg),
     ("roofline_summary", table_roofline_summary),
 ]

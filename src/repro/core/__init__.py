@@ -4,9 +4,24 @@ from repro.core.aggregate import (  # noqa: F401
     apply_update,
     buffered_aggregate,
     fedavg,
+    normalize_weights,
     staleness_weights,
     weighted_mean,
+    weighted_mean_stacked,
 )
+from repro.core.codec import (  # noqa: F401
+    ChunkedAESpec,
+    ComposedSpec,
+    FCAESpec,
+    IdentitySpec,
+    QuantizeSpec,
+    TopKSpec,
+    decode_and_aggregate,
+    decode_and_aggregate_sharded,
+    decode_batched,
+    stack_payloads,
+)
+from repro.core import codec  # noqa: F401
 from repro.core.autoencoder import (  # noqa: F401
     ChunkedAEConfig,
     ConvAEConfig,

@@ -3,10 +3,16 @@
 FedAvg (McMahan et al., 2017): sample-count-weighted mean of updates.
 FedProx (Li et al., 2018): FedAvg aggregation; the proximal term lives in the
 collaborator's local loss (see prepass.local_train(prox_mu=...)).
+
+The aggregation hot path is *stacked*: :func:`weighted_mean_stacked` reduces
+a pytree whose leaves carry a leading client axis with one ``einsum`` per
+leaf, which is what the fused server decode→aggregate path emits
+(DESIGN.md §7). The sequence API :func:`weighted_mean` is a thin wrapper
+that stacks per-client pytrees and delegates.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -14,21 +20,52 @@ import jax.numpy as jnp
 Pytree = Any
 
 
+def normalize_weights(weights: Sequence[float]) -> List[float]:
+    """Host-side weight normalization shared by every aggregation path.
+
+    Normalizing once in python float64 (rather than inside each jitted
+    reduction) keeps the sequential, stacked, and fused server paths
+    bit-identical to each other for the same weights."""
+    total = float(sum(weights))
+    return [float(w) / total for w in weights]
+
+
+def weighted_mean_stacked(stacked: Pytree,
+                          weights: Union[Sequence[float], jax.Array],
+                          *, normalized: bool = False) -> Pytree:
+    """Weighted mean over the leading client axis of every leaf.
+
+    ``stacked`` leaves have shape ``(C, ...)``; the reduction is a single
+    ``einsum`` per leaf instead of a per-update accumulation loop, so the
+    whole cohort reduces in one XLA op (DESIGN.md §7). Weights are
+    normalized unless the caller says they already are — host-side for
+    python sequences (bit-stable across paths), traced for device arrays."""
+    if isinstance(weights, jax.Array):
+        w = weights.astype(jnp.float32)
+        if not normalized:
+            w = w / jnp.sum(w)
+    else:
+        if not normalized:
+            weights = normalize_weights(weights)
+        w = jnp.asarray(weights, jnp.float32)
+
+    def combine(leaf):
+        m = jnp.einsum("c,c...->...", w, leaf.astype(jnp.float32))
+        return m.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(combine, stacked)
+
+
 def weighted_mean(updates: Sequence[Pytree],
                   weights: Optional[Sequence[float]] = None) -> Pytree:
+    """Sequence API kept for callers holding per-client pytrees: stacks the
+    leaves and delegates to :func:`weighted_mean_stacked`."""
     n = len(updates)
     if weights is None:
         weights = [1.0] * n
-    total = float(sum(weights))
-    norm = [w / total for w in weights]
-
-    def combine(*leaves):
-        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
-        for w, leaf in zip(norm, leaves):
-            acc = acc + w * leaf.astype(jnp.float32)
-        return acc.astype(leaves[0].dtype)
-
-    return jax.tree_util.tree_map(combine, *updates)
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *updates)
+    return weighted_mean_stacked(stacked, normalize_weights(weights),
+                                 normalized=True)
 
 
 def apply_update(global_params: Pytree, mean_update: Pytree,

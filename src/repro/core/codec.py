@@ -1,0 +1,379 @@
+"""Jit-native codec protocol: static specs + pure encode/decode functions.
+
+The stateful ``Compressor`` classes (core/compressor.py) are host-side
+adapters over this layer. A codec here is a pair of pure functions driven by
+a **spec** — a small frozen (hashable) dataclass carrying everything static:
+original length, bit widths, chunking, AE shapes. Specs are valid
+``jax.jit`` static arguments, payloads are dicts of fixed-shape arrays, and
+nothing in ``decode`` round-trips a traced value through Python (the old
+``int(payload["orig_len"])`` host syncs are gone — ``orig_len`` is spec
+data). That makes every codec:
+
+* jit-compatible: ``jax.jit(decode, static_argnums=0)`` just works;
+* vmap-compatible over a leading client axis, which is what the batched
+  aggregator path needs (DESIGN.md §7);
+* shard_map-compatible: the client axis splits across devices with a psum
+  epilogue (DESIGN.md §7.2).
+
+The server-side entry point is :func:`decode_and_aggregate`: stack the
+cohort's payloads along a leading client axis (:func:`stack_payloads`) and
+decode + FedAvg-reduce the whole cohort in **one** jitted call. The generic
+path is a natively-batched decode followed by a per-element ``einsum`` over
+the client axis; ``ChunkedAESpec(use_kernel=True)`` routes the final decoder
+layer through the fused Pallas kernel (kernels/fused_decode_agg.py), which
+folds the FedAvg weight into the matmul accumulation so per-client decoded
+tensors are never materialized (memory math in DESIGN.md §7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import AEConfig
+from repro.core import autoencoder as ae
+from repro.core.autoencoder import ChunkedAEConfig
+
+Params = Any
+Payload = Dict[str, jax.Array]
+
+
+# =====================================================================
+# specs — frozen, hashable, jit-static
+# =====================================================================
+@dataclasses.dataclass(frozen=True)
+class IdentitySpec:
+    """No compression: the flat update crosses the wire as-is."""
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeSpec:
+    """Blockwise absmax int8 / packed-int4 (FedPAQ-style baseline)."""
+    size: int
+    bits: int = 8
+    block: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSpec:
+    """Top-k magnitudes (DGC/STC-style); ships (values, int32 indices)."""
+    size: int
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FCAESpec:
+    """Paper-faithful full FC AE; ``cfg.input_dim ≥ size`` (padded)."""
+    size: int
+    cfg: AEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedAESpec:
+    """Shared-chunk AE (DESIGN.md §3.2); ``use_kernel`` routes through the
+    Pallas fused-dense / fused decode→aggregate kernels."""
+    size: int
+    cfg: ChunkedAEConfig
+    use_kernel: bool = False
+
+    @property
+    def n_chunks(self) -> int:
+        return -(-self.size // self.cfg.chunk_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedSpec:
+    """AE latents further quantized (§4.2 "orthogonal add-on")."""
+    inner: Union[FCAESpec, ChunkedAESpec]
+    bits: int = 8
+    block: int = 64
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+
+CodecSpec = Union[IdentitySpec, QuantizeSpec, TopKSpec, FCAESpec,
+                  ChunkedAESpec, ComposedSpec]
+
+
+def latent_shape(spec: Union[FCAESpec, ChunkedAESpec]) -> Tuple[int, ...]:
+    """Static shape of the AE latent payload entry ``z``."""
+    if isinstance(spec, FCAESpec):
+        return (spec.cfg.latent_dim,)
+    if isinstance(spec, ChunkedAESpec):
+        return (spec.n_chunks, spec.cfg.latent_chunk)
+    raise TypeError(f"no latent for {type(spec).__name__}")
+
+
+# =====================================================================
+# encode: flat (size,) → payload dict of fixed-shape arrays
+# =====================================================================
+def encode(spec: CodecSpec, params: Optional[Params],
+           flat: jax.Array) -> Payload:
+    """Pure collaborator-side encoder. ``params`` is the AE parameter pytree
+    for the AE specs, ``None`` otherwise. Jit-able with ``spec`` static."""
+    if isinstance(spec, IdentitySpec):
+        return {"flat": flat}
+    if isinstance(spec, QuantizeSpec):
+        from repro.kernels import ops
+        q, scales, _ = ops.quantize_blocks(flat, bits=spec.bits,
+                                           block=spec.block)
+        return {"q": q, "scales": scales}
+    if isinstance(spec, TopKSpec):
+        _, idx = jax.lax.top_k(jnp.abs(flat), spec.k)
+        idx = idx.astype(jnp.int32)
+        return {"values": flat[idx], "indices": idx}
+    if isinstance(spec, FCAESpec):
+        pad = spec.cfg.input_dim - spec.size
+        assert pad >= 0, (
+            f"AE input_dim {spec.cfg.input_dim} < update size {spec.size}")
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return {"z": ae.fc_encode(params, spec.cfg, flat)}
+    if isinstance(spec, ChunkedAESpec):
+        if spec.use_kernel:
+            from repro.kernels import ops
+            return {"z": ops.ae_encode(params, spec.cfg, flat)}
+        return {"z": ae.chunked_encode(params, spec.cfg, flat)}
+    if isinstance(spec, ComposedSpec):
+        from repro.kernels import ops
+        z = encode(spec.inner, params, flat)["z"]
+        q, scales, _ = ops.quantize_blocks(z.reshape(-1), bits=spec.bits,
+                                           block=spec.block)
+        return {"z_q": q, "z_scales": scales}
+    raise TypeError(f"unknown spec {type(spec).__name__}")
+
+
+# =====================================================================
+# decode: payload → flat (size,)
+# =====================================================================
+def _dequant_to(spec_bits: int, spec_block: int, n: int,
+                q: jax.Array, scales: jax.Array) -> jax.Array:
+    from repro.kernels import ops
+    return ops.dequantize_blocks(q, scales, bits=spec_bits,
+                                 block=spec_block, orig_len=n)
+
+
+def decode(spec: CodecSpec, params: Optional[Params],
+           payload: Payload) -> jax.Array:
+    """Pure aggregator-side decoder → flat ``(spec.size,)`` vector. No
+    traced→Python casts: every length/shape is static spec data, so the
+    whole function stages into one XLA computation under ``jax.jit``."""
+    if isinstance(spec, IdentitySpec):
+        return payload["flat"]
+    if isinstance(spec, QuantizeSpec):
+        return _dequant_to(spec.bits, spec.block, spec.size,
+                           payload["q"], payload["scales"])
+    if isinstance(spec, TopKSpec):
+        flat = jnp.zeros((spec.size,), payload["values"].dtype)
+        return flat.at[payload["indices"]].set(payload["values"])
+    if isinstance(spec, FCAESpec):
+        flat = ae.fc_decode(params, spec.cfg, payload["z"])
+        return flat[:spec.size]
+    if isinstance(spec, ChunkedAESpec):
+        if spec.use_kernel:
+            from repro.kernels import ops
+            return ops.ae_decode(params, spec.cfg, payload["z"], spec.size)
+        return ae.chunked_decode(params, spec.cfg, payload["z"], spec.size)
+    if isinstance(spec, ComposedSpec):
+        n_latent = 1
+        for d in latent_shape(spec.inner):
+            n_latent *= d
+        z = _dequant_to(spec.bits, spec.block, n_latent,
+                        payload["z_q"], payload["z_scales"])
+        return decode(spec.inner, params,
+                      {"z": z.reshape(latent_shape(spec.inner))})
+    raise TypeError(f"unknown spec {type(spec).__name__}")
+
+
+# =====================================================================
+# batched decode over a leading client axis
+# =====================================================================
+def stack_payloads(payloads) -> Payload:
+    """Stack per-client payload dicts along a new leading client axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payloads)
+
+
+def decode_batched(spec: CodecSpec, params: Optional[Params],
+                   stacked: Payload, *,
+                   params_batched: bool = False) -> jax.Array:
+    """Decode a whole cohort at once: stacked payload ``(C, ...)`` →
+    ``(C, size)``. With ``params_batched`` the AE params carry a leading
+    client axis too (per-client decoders) and the decode vmaps over both;
+    otherwise the shared-params fast path reshapes the client axis into the
+    existing batch dimension of each kernel, which is bit-identical to
+    per-client decoding for the pointwise codecs."""
+    if params_batched:
+        return jax.vmap(lambda p, pl: decode(spec, p, pl))(params, stacked)
+    if isinstance(spec, IdentitySpec):
+        return stacked["flat"]
+    if isinstance(spec, QuantizeSpec):
+        q, scales = stacked["q"], stacked["scales"]
+        C = scales.shape[0]
+        from repro.kernels import ops
+        if spec.bits == 4:
+            q = ops.unpack_nibbles(q).reshape(C, -1, spec.block)
+        nb = q.shape[1]
+        from repro.kernels.ops import interpret_default
+        from repro.kernels.quantize import dequantize_blocks_2d
+        x = dequantize_blocks_2d(q.reshape(C * nb, spec.block),
+                                 scales.reshape(C * nb),
+                                 block=spec.block,
+                                 interpret=interpret_default())
+        return x.reshape(C, -1)[:, :spec.size]
+    if isinstance(spec, TopKSpec):
+        return jax.vmap(lambda pl: decode(spec, None, pl))(stacked)
+    if isinstance(spec, FCAESpec):
+        # fc_decode is rank-polymorphic: (C, latent) → (C, input_dim)
+        return ae.fc_decode(params, spec.cfg, stacked["z"])[:, :spec.size]
+    if isinstance(spec, ChunkedAESpec):
+        z = stacked["z"]                       # (C, n_chunks, latent)
+        C = z.shape[0]
+        chunks = _chunked_dec_chunks(spec, params, z)
+        return chunks.reshape(C, -1)[:, :spec.size]
+    if isinstance(spec, ComposedSpec):
+        n_latent = 1
+        for d in latent_shape(spec.inner):
+            n_latent *= d
+        C = stacked["z_scales"].shape[0]
+        z = jax.vmap(lambda q, s: _dequant_to(spec.bits, spec.block,
+                                              n_latent, q, s))(
+            stacked["z_q"], stacked["z_scales"])
+        return decode_batched(
+            spec.inner, params,
+            {"z": z.reshape((C,) + latent_shape(spec.inner))})
+    raise TypeError(f"unknown spec {type(spec).__name__}")
+
+
+def _chunked_dec_chunks(spec: ChunkedAESpec, params: Params,
+                        z: jax.Array) -> jax.Array:
+    """(C, n_chunks, latent) → (C, n_chunks, chunk_size): the client axis is
+    folded into the chunk batch, so the decode is one matmul chain whichever
+    path (Pallas fused_dense or pure-jnp) runs."""
+    C, nc, latent = z.shape
+    z2 = z.reshape(C * nc, latent)
+    if spec.use_kernel:
+        from repro.kernels import ops
+        flat = ops.ae_decode(params, spec.cfg,
+                             z2, C * nc * spec.cfg.chunk_size)
+    else:
+        flat = ae.chunked_decode(params, spec.cfg,
+                                 z2, C * nc * spec.cfg.chunk_size)
+    return flat.reshape(C, nc, spec.cfg.chunk_size)
+
+
+# =====================================================================
+# fused decode→aggregate: the one-jitted-call-per-round server path
+# =====================================================================
+@functools.partial(jax.jit, static_argnames=("spec", "params_batched"))
+def decode_and_aggregate(spec: CodecSpec, params: Optional[Params],
+                         stacked: Payload, weights: jax.Array,
+                         base: Optional[jax.Array] = None, *,
+                         params_batched: bool = False) -> jax.Array:
+    """One jitted call per round: decode the stacked cohort payloads and
+    FedAvg-reduce along the client axis → mean flat update ``(size,)``.
+
+    ``weights`` must already be normalized (Σ=1; use
+    ``aggregate.normalize_weights`` — normalizing host-side keeps this path
+    bit-identical to the sequential decode-then-``weighted_mean`` path).
+    ``base`` (e.g. the flat global params under the §5.2 weights-payload
+    protocol) is subtracted from each decoded row before the reduction.
+
+    Generic path: natively-batched decode + per-element ``einsum`` over the
+    client axis. ``ChunkedAESpec(use_kernel=True)`` with shared params:
+    hidden decoder layers run on the folded (C·n_chunks) batch, then the
+    fused Pallas kernel folds ``weights`` into the final decoder matmul so
+    the full-model-sized reconstructions are never materialized per client
+    (DESIGN.md §7.1)."""
+    w = weights.astype(jnp.float32)
+    if (isinstance(spec, ChunkedAESpec) and spec.use_kernel
+            and not params_batched):
+        mean = _fused_chunked_decode_agg(spec, params, stacked["z"], w)
+        return mean if base is None else mean - base
+    rows = decode_batched(spec, params, stacked,
+                          params_batched=params_batched)
+    if base is not None:
+        rows = rows - base[None, :]
+    return jnp.einsum("c,cp->p", w, rows.astype(jnp.float32))
+
+
+def _fused_chunked_decode_agg(spec: ChunkedAESpec, params: Params,
+                              z: jax.Array, weights: jax.Array) -> jax.Array:
+    """ChunkedAE fused path: per-client work stays latent-sided (the hidden
+    stack output ``(C, n_chunks, hidden)``); the chunk_size-wide expansion
+    happens inside the weighted-accumulation kernel, once."""
+    from repro.kernels.fused_dense import fused_dense
+    from repro.kernels.fused_decode_agg import fused_decode_agg
+    from repro.kernels.ops import interpret_default
+    interp = interpret_default()
+    C, nc, latent = z.shape
+    dec = params["dec"]
+    x = z.reshape(C * nc, latent)
+    for layer in dec[:-1]:                     # hidden stack, act throughout
+        # large bm: the folded (C·n_chunks) batch is tall and the hidden
+        # widths narrow, so row-fat tiles stay far under VMEM while cutting
+        # the grid-step count (which is what interpret-mode costs scale on)
+        x = fused_dense(x, layer["w"], layer["b"],
+                        act=spec.cfg.activation, bm=512, interpret=interp)
+    h = x.reshape(C, nc, x.shape[-1])
+    chunks = fused_decode_agg(h, weights, dec[-1]["w"], dec[-1]["b"],
+                              interpret=interp)       # (nc, chunk_size)
+    norm = params["norm"]
+    chunks = chunks * norm["std"] + norm["mean"]      # Σw=1 ⇒ mean denorm
+    return chunks.reshape(-1)[:spec.size]
+
+
+# =====================================================================
+# shard_map variant: client axis split across devices (DESIGN.md §7.2)
+# =====================================================================
+@functools.lru_cache(maxsize=None)
+def _sharded_callable(spec: CodecSpec, mesh: jax.sharding.Mesh):
+    """Build (once per (spec, mesh)) the jitted shard_map reduction so
+    repeated rounds dispatch a cached executable instead of re-tracing."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def shard_fn(params, stacked_shard, w_shard):
+        rows = decode_batched(spec, params, stacked_shard)
+        partial = jnp.einsum("c,cp->p", w_shard.astype(jnp.float32),
+                             rows.astype(jnp.float32))
+        return jax.lax.psum(partial, "clients")
+
+    # check_rep=False: pallas_call (the quantize/fused-dense kernels inside
+    # decode_batched) has no shard_map replication rule yet
+    return jax.jit(shard_map(shard_fn, mesh=mesh,
+                             in_specs=(P(), P("clients"), P("clients")),
+                             out_specs=P(), check_rep=False))
+
+
+def decode_and_aggregate_sharded(spec: CodecSpec, params: Optional[Params],
+                                 stacked: Payload, weights: jax.Array,
+                                 base: Optional[jax.Array] = None,
+                                 mesh: Optional[jax.sharding.Mesh] = None
+                                 ) -> jax.Array:
+    """Large-cohort variant: shard the client axis over a 1-D ``clients``
+    device mesh; each device computes its shard's weighted *sum* (weights
+    are globally pre-normalized, so no renormalization is needed; AE params
+    are replicated), and a single ``psum`` produces the cohort mean. The
+    cohort is zero-weight padded up to a device multiple (zero payloads
+    decode to finite values for every codec, so padded rows contribute
+    exactly 0). Layout notes in DESIGN.md §7.2."""
+    import numpy as np
+
+    if mesh is None:
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("clients",))
+    n_dev = mesh.devices.size
+    C = weights.shape[0]
+    pad = (-C) % n_dev
+    if pad:
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)),
+            stacked)
+        weights = jnp.pad(weights, (0, pad))
+    mean = _sharded_callable(spec, mesh)(params, stacked, weights)
+    return mean if base is None else mean - base

@@ -6,6 +6,15 @@ pytree→pytree: they flatten the update with ``ravel_pytree``, compress the
 flat vector, and unflatten on decode, so they work for every architecture in
 the zoo (§Arch-applicability in DESIGN.md).
 
+As of the jit-native codec refactor (DESIGN.md §7) these classes are thin
+host-side **adapters** over ``core/codec.py``: each one contributes a static
+``spec(n)`` (hashable, jit-static — shapes, bits, chunking, ``orig_len``)
+plus its AE params, and delegates the actual math to the pure
+``codec.encode``/``codec.decode`` functions. Payloads are dicts of
+fixed-shape arrays with **no** length metadata on the wire (``orig_len`` is
+spec data now), so the same payloads stack along a client axis and feed the
+batched server path ``codec.decode_and_aggregate``.
+
 Implementations:
 * Identity           — baseline (no compression)
 * Quantize (int8/4)  — the traditional baseline the paper cites (FedPAQ et al.)
@@ -28,6 +37,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.configs.paper import AEConfig
 from repro.core import autoencoder as ae
+from repro.core import codec
 
 Pytree = Any
 
@@ -41,6 +51,20 @@ def tree_bytes(tree: Pytree) -> int:
 
 
 _nbytes = tree_bytes
+
+
+def codec_stats(flat: jax.Array, payload: Pytree) -> Dict[str, float]:
+    """The Eq.-4 byte accounting for one encoded update — the single
+    definition shared by ``Compressor.roundtrip`` and the scheduler's
+    ``_encode_local`` (so RoundRecord ratios and roundtrip ratios can never
+    diverge)."""
+    stats = {
+        "original_bytes": float(flat.size * flat.dtype.itemsize),
+        "compressed_bytes": float(tree_bytes(payload)),
+    }
+    stats["compression_ratio"] = (
+        stats["original_bytes"] / max(stats["compressed_bytes"], 1.0))
+    return stats
 
 
 # ---------------------------------------------------------------------------
@@ -61,38 +85,48 @@ def ef_residual(payload: Pytree, decoded: Pytree) -> Pytree:
 
 
 class Compressor:
-    """Base codec over update pytrees."""
+    """Base codec adapter over update pytrees.
+
+    Subclasses implement :meth:`spec` (static codec spec for an ``n``-element
+    flat update) and optionally :meth:`codec_params`; encode/decode/roundtrip
+    are inherited and delegate to the pure functions in ``core/codec.py``."""
 
     name = "base"
 
-    def encode(self, update: Pytree) -> Pytree:
+    def spec(self, n: int) -> codec.CodecSpec:
+        """The static (hashable, jit-static) spec for an n-element update."""
         raise NotImplementedError
 
+    def codec_params(self) -> Optional[Any]:
+        """AE parameter pytree for the AE codecs; None for pointwise ones."""
+        return None
+
+    def encode(self, update: Pytree) -> Pytree:
+        flat, _ = ravel_pytree(update)
+        spec = self.spec(flat.size)
+        self._spec = spec                     # remembered for decode()
+        return codec.encode(spec, self.codec_params(), flat)
+
     def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        raise NotImplementedError
+        spec = getattr(self, "_spec", None)
+        assert spec is not None, (
+            "decode() before encode(): the wire payload carries no length "
+            "metadata, so the static spec must come from this adapter's "
+            "last encode (or use codec.decode(spec, ...) directly)")
+        return unravel(codec.decode(spec, self.codec_params(), payload))
 
     def roundtrip(self, update: Pytree) -> Tuple[Pytree, Dict[str, float]]:
         flat, unravel = ravel_pytree(update)
         payload = self.encode(update)
         decoded = self.decode(payload, unravel)
-        stats = {
-            "original_bytes": float(flat.size * flat.dtype.itemsize),
-            "compressed_bytes": float(_nbytes(payload)),
-        }
-        stats["compression_ratio"] = (
-            stats["original_bytes"] / max(stats["compressed_bytes"], 1.0))
-        return decoded, stats
+        return decoded, codec_stats(flat, payload)
 
 
 class IdentityCompressor(Compressor):
     name = "identity"
 
-    def encode(self, update: Pytree) -> Pytree:
-        flat, _ = ravel_pytree(update)
-        return {"flat": flat}
-
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        return unravel(payload["flat"])
+    def spec(self, n: int) -> codec.IdentitySpec:
+        return codec.IdentitySpec(size=n)
 
 
 @dataclasses.dataclass
@@ -106,20 +140,8 @@ class QuantizeCompressor(Compressor):
     def __post_init__(self):
         self.name = f"quantize{self.bits}"
 
-    def encode(self, update: Pytree) -> Pytree:
-        from repro.kernels import ops
-        flat, _ = ravel_pytree(update)
-        q, scales, orig_len = ops.quantize_blocks(flat, bits=self.bits,
-                                                  block=self.block)
-        return {"q": q, "scales": scales,
-                "orig_len": jnp.int32(orig_len)}
-
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        from repro.kernels import ops
-        flat = ops.dequantize_blocks(payload["q"], payload["scales"],
-                                     bits=self.bits, block=self.block,
-                                     orig_len=int(payload["orig_len"]))
-        return unravel(flat)
+    def spec(self, n: int) -> codec.QuantizeSpec:
+        return codec.QuantizeSpec(size=n, bits=self.bits, block=self.block)
 
 
 @dataclasses.dataclass
@@ -129,17 +151,8 @@ class TopKCompressor(Compressor):
     fraction: float = 0.01
     name: str = "topk"
 
-    def encode(self, update: Pytree) -> Pytree:
-        flat, _ = ravel_pytree(update)
-        k = max(1, int(flat.size * self.fraction))
-        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
-        return {"values": flat[idx], "indices": idx.astype(jnp.int32),
-                "size": jnp.int32(flat.size)}
-
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        flat = jnp.zeros((int(payload["size"]),), payload["values"].dtype)
-        flat = flat.at[payload["indices"]].set(payload["values"])
-        return unravel(flat)
+    def spec(self, n: int) -> codec.TopKSpec:
+        return codec.TopKSpec(size=n, k=max(1, int(n * self.fraction)))
 
 
 @dataclasses.dataclass
@@ -150,49 +163,34 @@ class FCAECompressor(Compressor):
     cfg: AEConfig
     name: str = "fc_ae"
 
-    def encode(self, update: Pytree) -> Pytree:
-        flat, _ = ravel_pytree(update)
-        pad = self.cfg.input_dim - flat.size
-        assert pad >= 0, (
-            f"AE input_dim {self.cfg.input_dim} < update size {flat.size}")
-        orig = flat.size
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-        z = ae.fc_encode(self.params, self.cfg, flat)
-        return {"z": z, "orig_len": jnp.int32(orig)}
+    def spec(self, n: int) -> codec.FCAESpec:
+        return codec.FCAESpec(size=n, cfg=self.cfg)
 
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        flat = ae.fc_decode(self.params, self.cfg, payload["z"])
-        return unravel(flat[:int(payload["orig_len"])])
+    def codec_params(self):
+        return self.params
 
 
 @dataclasses.dataclass
 class ChunkedAECompressor(Compressor):
-    """Shared-chunk AE (TPU-scale). Uses the Pallas encode/decode kernels when
-    running on TPU; pure-jnp path otherwise."""
+    """Shared-chunk AE (TPU-scale). ``use_kernel=None`` (the default)
+    auto-selects the Pallas kernel path from ``jax.default_backend()`` —
+    TPU runs take the kernels natively, CPU/GPU take pure-jnp — with
+    ``REPRO_USE_KERNEL=0|1`` as the explicit override
+    (``kernels.ops.use_kernel_default``)."""
 
     params: Any
     cfg: ae.ChunkedAEConfig
-    use_kernel: bool = False
+    use_kernel: Optional[bool] = None
     name: str = "chunked_ae"
 
-    def encode(self, update: Pytree) -> Pytree:
-        flat, _ = ravel_pytree(update)
-        if self.use_kernel:
-            from repro.kernels import ops
-            z = ops.ae_encode(self.params, self.cfg, flat)
-        else:
-            z = ae.chunked_encode(self.params, self.cfg, flat)
-        return {"z": z, "orig_len": jnp.int32(flat.size)}
+    def spec(self, n: int) -> codec.ChunkedAESpec:
+        from repro.kernels.ops import use_kernel_default
+        return codec.ChunkedAESpec(
+            size=n, cfg=self.cfg,
+            use_kernel=use_kernel_default(self.use_kernel))
 
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        n = int(payload["orig_len"])
-        if self.use_kernel:
-            from repro.kernels import ops
-            flat = ops.ae_decode(self.params, self.cfg, payload["z"], n)
-        else:
-            flat = ae.chunked_decode(self.params, self.cfg, payload["z"], n)
-        return unravel(flat)
+    def codec_params(self):
+        return self.params
 
 
 @dataclasses.dataclass
@@ -208,26 +206,9 @@ class ComposedCompressor(Compressor):
     def __post_init__(self):
         self.name = f"{self.inner.name}+q{self.bits}"
 
-    def encode(self, update: Pytree) -> Pytree:
-        from repro.kernels import ops
-        payload = self.inner.encode(update)
-        z = payload["z"]
-        q, scales, orig = ops.quantize_blocks(z.reshape(-1), bits=self.bits,
-                                              block=self.block)
-        out = dict(payload)
-        out["z_shape"] = jnp.array(z.shape, jnp.int32)
-        out["z"] = q
-        out["z_scales"] = scales
-        out["z_len"] = jnp.int32(orig)
-        return out
+    def spec(self, n: int) -> codec.ComposedSpec:
+        return codec.ComposedSpec(inner=self.inner.spec(n), bits=self.bits,
+                                  block=self.block)
 
-    def decode(self, payload: Pytree, unravel: Callable) -> Pytree:
-        from repro.kernels import ops
-        z = ops.dequantize_blocks(payload["z"], payload["z_scales"],
-                                  bits=self.bits, block=self.block,
-                                  orig_len=int(payload["z_len"]))
-        inner_payload = {k: v for k, v in payload.items()
-                         if k not in ("z", "z_scales", "z_len", "z_shape")}
-        inner_payload["z"] = z.reshape(tuple(int(s)
-                                             for s in payload["z_shape"]))
-        return self.inner.decode(inner_payload, unravel)
+    def codec_params(self):
+        return self.inner.codec_params()

@@ -9,7 +9,7 @@ the reconstruction residual local and folds it into the next round's update.
 
 Round *orchestration* is delegated to a pluggable ``RoundScheduler``
 (DESIGN.md §6): the default ``SyncFedAvg`` reproduces the original
-all-clients-every-round loop bit-for-bit, while ``SampledSync`` (C-of-N
+all-clients-every-round loop (float tolerance, §7), while ``SampledSync`` (C-of-N
 cohorts, vmap-batched local training) and ``AsyncBuffered`` (FedBuff-style
 staleness-weighted buffering over a simulated latency model) open the
 partial-participation and straggler scenario families the paper's

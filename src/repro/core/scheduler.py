@@ -7,8 +7,9 @@ that make compressed-update schemes pay off are *client sampling* and
 *asynchronous/buffered aggregation* (Shahid et al., 2021; Nguyen et al.,
 2022), so round orchestration is now a strategy object:
 
-* :class:`SyncFedAvg`     — the seed behavior, preserved bit-for-bit; the
-  default scheduler of ``FederatedRun``.
+* :class:`SyncFedAvg`     — the seed behavior (same bytes, params equal to
+  float tolerance under the fused server path); the default scheduler of
+  ``FederatedRun``.
 * :class:`SampledSync`    — C-of-N cohort per round (McMahan et al., 2017's
   ``C`` fraction), with the homogeneous-cohort hot path batched through
   ``jax.vmap`` (one jitted call instead of C Python-loop invocations) and
@@ -19,6 +20,16 @@ that make compressed-update schemes pay off are *client sampling* and
   new global model. Stragglers are a first-class scenario via
   :class:`LatencyModel`.
 
+**Server decode path (DESIGN.md §7):** clients ship *encoded payloads*, not
+decoded updates. Every scheduler routes the whole round's cohort through
+:func:`_server_aggregate`, which stacks the payloads along a client axis and
+runs **one** jitted ``codec.decode_and_aggregate`` call — batched decode +
+einsum reduction generically, the fused Pallas decode→aggregate kernel for
+the kernel-path chunked AE. The only per-client decode left is the
+*collaborator-side* one that error feedback requires (a client must know
+what the codec lost to keep its residual — that decode happens on the
+client in a real deployment, and here in ``_encode_local``).
+
 Per-client compressor state (the error-feedback residual) lives in
 :class:`ClientState`, owned by the run and threaded through whichever
 scheduler is active — a residual survives rounds where its client is not
@@ -28,14 +39,18 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregate import buffered_aggregate, fedavg
-from repro.core.compressor import ef_compensate, ef_residual, tree_bytes
+from repro.core import codec
+from repro.core.aggregate import (apply_update, normalize_weights,
+                                  staleness_weights, weighted_mean)
+from repro.core.compressor import (codec_stats, ef_compensate, ef_residual,
+                                   tree_bytes)
 from repro.core.prepass import evaluate, local_train, local_train_batched
 
 Pytree = Any
@@ -55,15 +70,27 @@ class ClientState:
     dispatched: Optional[Pytree] = None
 
 
+@dataclasses.dataclass
+class EncodedUpdate:
+    """What one collaborator ships for one round: the wire payload plus the
+    static spec that decodes it (specs are hashable jit-static data, zero
+    wire cost), the sample weight, codec byte stats, and local metrics."""
+
+    payload: Pytree
+    spec: codec.CodecSpec
+    params: Optional[Pytree]           # AE decoder params (None = pointwise)
+    weight: float
+    stats: Dict[str, float]
+    metrics: Dict[str, float]
+
+
 def _client_round(run, ci: int, global_params: Pytree, round_seed: int
-                  ) -> Tuple[Pytree, float, Dict[str, float],
-                             Dict[str, float]]:
+                  ) -> EncodedUpdate:
     """One collaborator's full local round against ``global_params``: train,
     build the payload (weights or update), error-feedback compensate,
-    codec roundtrip, convert to an update. Operation order is identical to
-    the seed ``FederatedRun.run`` body so ``SyncFedAvg`` reproduces it
-    bit-for-bit. Returns (decoded update, sample weight, codec stats,
-    final-epoch metrics)."""
+    encode. Operation order is identical to the seed ``FederatedRun.run``
+    body so ``SyncFedAvg`` reproduces it (to float tolerance — the fused
+    one-call server reduction reassociates vs the seed's op chain)."""
     cfg = run.cfg
     data = run.datasets[ci]
     state = run.clients[ci]
@@ -80,28 +107,72 @@ def _client_round(run, ci: int, global_params: Pytree, round_seed: int
 
 def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
                   state: ClientState, metrics: Dict[str, float]
-                  ) -> Tuple[Pytree, float, Dict[str, float],
-                             Dict[str, float]]:
-    """Payload selection + error feedback + codec roundtrip for an
-    already-trained ``local`` model (shared by the loop and vmap paths)."""
+                  ) -> EncodedUpdate:
+    """Payload selection + error feedback + encode for an already-trained
+    ``local`` model (shared by the loop and vmap paths). Returns the wire
+    payload — decoding moved server-side into :func:`_server_aggregate`;
+    only error feedback still decodes here, because the residual is
+    *collaborator-side* state (the client reconstructs what the server will
+    see to measure what the codec lost)."""
     cfg = run.cfg
     if cfg.payload == "weights":
-        payload = local                    # paper §5.2 protocol
+        payload_tree = local               # paper §5.2 protocol
     else:
-        payload = jax.tree_util.tree_map(
+        payload_tree = jax.tree_util.tree_map(
             lambda a, b: a - b, local, global_params)
     if cfg.error_feedback:
-        payload = ef_compensate(payload, state.residual)
+        payload_tree = ef_compensate(payload_tree, state.residual)
 
-    decoded, stats = run.compressors[ci].roundtrip(payload)
+    comp = run.compressors[ci]
+    flat, unravel = ravel_pytree(payload_tree)
+    spec = comp.spec(flat.size)
+    params = comp.codec_params()
+    payload = codec.encode(spec, params, flat)
+    stats = codec_stats(flat, payload)
     if cfg.error_feedback:
-        state.residual = ef_residual(payload, decoded)
-    if cfg.payload == "weights":
-        # aggregation averages updates: express weights as an update
-        decoded = jax.tree_util.tree_map(
-            lambda w, g: w - g, decoded, global_params)
+        decoded = unravel(codec.decode(spec, params, payload))
+        state.residual = ef_residual(payload_tree, decoded)
     weight = float(run.datasets[ci]["x"].shape[0])
-    return decoded, weight, stats, metrics
+    return EncodedUpdate(payload=payload, spec=spec, params=params,
+                         weight=weight, stats=stats, metrics=metrics)
+
+
+def _server_aggregate(run, encoded: Sequence[EncodedUpdate],
+                      weights: Sequence[float]) -> Pytree:
+    """The aggregator's round step: **one** jitted decode→aggregate call
+    over the stacked cohort (DESIGN.md §7), then the server-lr update.
+
+    Homogeneous cohorts (one spec — the common case; per-client AE params
+    are fine and ride a stacked client axis) take the fused path. A cohort
+    mixing *different* codecs falls back to per-client decode +
+    ``weighted_mean``; both reduce with the same einsum so the paths agree
+    to float tolerance (tested in tests/test_codec.py)."""
+    cfg = run.cfg
+    g_flat, unravel = ravel_pytree(run.global_params)
+    base = g_flat if cfg.payload == "weights" else None
+    norm_w = jnp.asarray(normalize_weights(weights), jnp.float32)
+
+    spec0 = encoded[0].spec
+    if all(e.spec == spec0 for e in encoded):
+        stacked = codec.stack_payloads([e.payload for e in encoded])
+        if all(e.params is encoded[0].params for e in encoded):
+            params, params_batched = encoded[0].params, False
+        else:
+            params = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[e.params for e in encoded])
+            params_batched = True
+        mean_flat = codec.decode_and_aggregate(
+            spec0, params, stacked, norm_w, base,
+            params_batched=params_batched)
+        mean_update = unravel(mean_flat)
+    else:                                   # heterogeneous codec cohort
+        rows = [unravel(codec.decode(e.spec, e.params, e.payload))
+                for e in encoded]
+        if base is not None:
+            rows = [jax.tree_util.tree_map(lambda w, g: w - g, r,
+                                           run.global_params) for r in rows]
+        mean_update = weighted_mean(rows, list(weights))
+    return apply_update(run.global_params, mean_update, cfg.server_lr)
 
 
 def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
@@ -141,30 +212,25 @@ class SyncFedAvg(RoundScheduler):
     """The seed behavior: every collaborator trains every round; FedAvg over
     all updates. Downlink accounting is new (the seed tracked uplink only)
     but the seed fields — metrics, bytes_up, compression_ratio — are
-    reproduced bit-for-bit for a fixed seed."""
+    reproduced exactly for a fixed seed (params to float tolerance).
+    Aggregation is the one-call batched server path (DESIGN.md §7)."""
 
     name = "sync_fedavg"
 
     def run_round(self, r: int):
         run, cfg = self.run, self.run.cfg
         model_bytes = float(tree_bytes(run.global_params))
-        updates, weights, metrics = [], [], []
-        bytes_up = bytes_raw = 0.0
-        ratios = []
-        for ci in range(len(run.datasets)):
-            decoded, w, stats, m = _client_round(
-                run, ci, run.global_params, cfg.seed * 997 + r)
-            updates.append(decoded)
-            weights.append(w)
-            bytes_up += stats["compressed_bytes"]
-            bytes_raw += stats["original_bytes"]
-            ratios.append(stats["compression_ratio"])
-            metrics.append(m)
-        run.global_params = fedavg(run.global_params, updates, weights,
-                                   cfg.server_lr)
+        encoded = [
+            _client_round(run, ci, run.global_params, cfg.seed * 997 + r)
+            for ci in range(len(run.datasets))]
+        run.global_params = _server_aggregate(
+            run, encoded, [e.weight for e in encoded])
         n = len(run.datasets)
         return _finish_record(
-            run, r, metrics, bytes_up, bytes_raw, ratios,
+            run, r, [e.metrics for e in encoded],
+            sum(e.stats["compressed_bytes"] for e in encoded),
+            sum(e.stats["original_bytes"] for e in encoded),
+            [e.stats["compression_ratio"] for e in encoded],
             bytes_down=model_bytes * n, bytes_down_raw=model_bytes * n,
             participants=list(range(n)))
 
@@ -232,29 +298,24 @@ class SampledSync(RoundScheduler):
         else:
             self.loop_rounds += 1
 
-        updates, weights, metrics = [], [], []
-        bytes_up = bytes_raw = 0.0
-        ratios = []
+        encoded = []
         for k, ci in enumerate(cohort):
             run.clients[ci].version = r
             if batched is not None:
                 local, m = batched[k]
-                decoded, w, stats, m = _encode_local(
-                    run, ci, local, run.global_params, run.clients[ci], m)
+                encoded.append(_encode_local(
+                    run, ci, local, run.global_params, run.clients[ci], m))
             else:
-                decoded, w, stats, m = _client_round(
-                    run, ci, run.global_params, cfg.seed * 997 + r)
-            updates.append(decoded)
-            weights.append(w)
-            bytes_up += stats["compressed_bytes"]
-            bytes_raw += stats["original_bytes"]
-            ratios.append(stats["compression_ratio"])
-            metrics.append(m)
-        run.global_params = fedavg(run.global_params, updates, weights,
-                                   cfg.server_lr)
+                encoded.append(_client_round(
+                    run, ci, run.global_params, cfg.seed * 997 + r))
+        run.global_params = _server_aggregate(
+            run, encoded, [e.weight for e in encoded])
         c = len(cohort)
         return _finish_record(
-            run, r, metrics, bytes_up, bytes_raw, ratios,
+            run, r, [e.metrics for e in encoded],
+            sum(e.stats["compressed_bytes"] for e in encoded),
+            sum(e.stats["original_bytes"] for e in encoded),
+            [e.stats["compression_ratio"] for e in encoded],
             bytes_down=model_bytes * c, bytes_down_raw=model_bytes * c,
             participants=cohort)
 
@@ -294,7 +355,8 @@ class AsyncBuffered(RoundScheduler):
     All clients are dispatched at t=0 with the v0 global model. A simulated
     event loop (priority queue on arrival time, FIFO tie-break) delivers
     trained+compressed updates; each ``run_round`` drains the first
-    ``buffer_k`` arrivals, aggregates them with staleness-discounted weights
+    ``buffer_k`` arrivals, aggregates them (one fused decode→aggregate call,
+    DESIGN.md §7) with staleness-discounted weights
     ``w_i * (1 + s_i) ** -staleness_power`` where ``s_i`` is how many global
     versions elapsed while client i was training, bumps the global version,
     and re-dispatches exactly those clients with the new model (downlink
@@ -347,35 +409,31 @@ class AsyncBuffered(RoundScheduler):
         bytes_down = self._pending_down
         self._pending_down = 0.0
 
-        updates, weights, stales, metrics = [], [], [], []
+        encoded, stales = [], []
         arrived: List[int] = []
-        bytes_up = bytes_raw = 0.0
-        ratios = []
         for _ in range(k):
             t, _, ci = heapq.heappop(self._heap)
             self._clock = max(self._clock, t)
             state = run.clients[ci]
             # train lazily, against the (possibly stale) dispatched snapshot
-            decoded, w, stats, m = _client_round(
-                run, ci, state.dispatched, cfg.seed * 997 + state.version)
-            updates.append(decoded)
-            weights.append(w)
+            encoded.append(_client_round(
+                run, ci, state.dispatched, cfg.seed * 997 + state.version))
             stales.append(self._version - state.version)
             arrived.append(ci)
-            bytes_up += stats["compressed_bytes"]
-            bytes_raw += stats["original_bytes"]
-            ratios.append(stats["compression_ratio"])
-            metrics.append(m)
 
-        run.global_params = buffered_aggregate(
-            run.global_params, updates, weights, stales,
-            power=self.staleness_power, server_lr=cfg.server_lr)
+        run.global_params = _server_aggregate(
+            run, encoded,
+            staleness_weights([e.weight for e in encoded], stales,
+                              self.staleness_power))
         self._version += 1
         for ci in arrived:                 # re-dispatch with the new model,
             state = run.clients[ci]        # deferred to the next round so
             state.dispatched = None        # its downlink lands in a record
         self._to_redispatch = list(arrived)
         return _finish_record(
-            run, r, metrics, bytes_up, bytes_raw, ratios,
+            run, r, [e.metrics for e in encoded],
+            sum(e.stats["compressed_bytes"] for e in encoded),
+            sum(e.stats["original_bytes"] for e in encoded),
+            [e.stats["compression_ratio"] for e in encoded],
             bytes_down=bytes_down, bytes_down_raw=bytes_down,
             participants=arrived, staleness=stales, sim_time=self._clock)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused batched decode→aggregate epilogue.
+
+The aggregator's hot path at cohort scale (DESIGN.md §7): after the cohort's
+AE latents are pushed through the decoder's hidden stack, the *final*
+decoder layer is a linear matmul that expands each client's per-chunk
+hidden activations ``h_c`` (small, latent-side) into full-model-sized chunk
+reconstructions — and FedAvg immediately reduces those reconstructions
+across clients. Materializing the per-client decoded tensors costs
+``O(cohort × model)`` HBM; this kernel folds the per-client FedAvg weight
+into the decoder-matmul accumulation instead. Because the final layer is
+linear and shared, the weighted client reduction commutes with the matmul,
+so each grid step reduces its client block *before* the chunk-wide
+expansion:
+
+    out = Σ_blocks ( Σ_{c∈block} w_c · h_c ) @ W_dec  + b_dec   (Σ_c w_c = 1)
+
+Grid: ``(M/bm, C/bc)`` with the client-block axis innermost. Each output
+tile ``(bm, N)`` stays resident in VMEM while the kernel walks the cohort
+blocks: per step, a VPU reduction collapses ``bc`` clients' hidden tiles
+into one weighted tile (latent-sided — ``bc·bm·K`` floats), a single MXU
+matmul expands it to chunk width, and the result accumulates into the
+output; the bias is added on the first block. Full-model-sized data exists
+exactly once (the accumulator) — peak memory ``O(model)``, not
+``O(cohort × model)``; per-client tensors never reach chunk width even in
+VMEM (memory math in DESIGN.md §7.1).
+
+VMEM per step: ``bc·bm·K + K·N + bm·N`` floats; at the defaults
+(bc=16, bm=128, K≤512, N≤4096) ≈ 14.5 MB f32, inside the ~16 MB/core v5e
+budget (K=512 is the production hidden width; the codec defaults use
+K=32-64 where this is ≪1 MB).
+Validated against the pure-jnp oracle ``ref.fused_decode_agg_ref`` (which
+materializes the per-client decoded tensors this kernel avoids) in
+interpret mode (DESIGN.md §7.3, tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_decode_agg_kernel(w_ref, h_ref, wl_ref, b_ref, o_ref):
+    cb = pl.program_id(1)
+    w = w_ref[...].astype(jnp.float32)       # (bc, 1) client-block weights
+    h = h_ref[...].astype(jnp.float32)       # (bc, bm, K)
+    # weighted client reduction BEFORE the chunk-wide expansion (VPU,
+    # latent-sided): Σ_{c∈block} w_c · h_c → (bm, K)
+    hbar = jnp.sum(h * w[:, :, None], axis=0)
+    y = jnp.dot(hbar, wl_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(cb == 0)
+    def _init():
+        o_ref[...] = (y + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+    @pl.when(cb > 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + y).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "interpret"))
+def fused_decode_agg(h: jax.Array, weights: jax.Array, w_last: jax.Array,
+                     b_last: jax.Array, *, bm: int = 128, bc: int = 16,
+                     interpret: bool = False) -> jax.Array:
+    """``Σ_c weights[c] · (h[c] @ w_last) + b_last`` without materializing
+    any per-client ``(M, N)`` tensor.
+
+    h: (C, M, K) per-client penultimate decoder activations;
+    weights: (C,) pre-normalized FedAvg weights (must sum to 1 — the bias
+    is added once, which equals the weighted mean of per-client biases only
+    under that normalization);
+    w_last: (K, N), b_last: (N,) final decoder layer → (M, N).
+    ``bc`` is the client-block size per grid step (zero-weight padded).
+    """
+    C, M, K = h.shape
+    K2, N = w_last.shape
+    assert K == K2 and b_last.shape == (N,) and weights.shape == (C,)
+    bm = min(bm, max(8, M))
+    bc = min(bc, C)
+    Mp = -(-M // bm) * bm
+    Cp = -(-C // bc) * bc
+    if (Mp, Cp) != (M, C):
+        h = jnp.pad(h, ((0, Cp - C), (0, Mp - M), (0, 0)))
+    w2 = weights.astype(jnp.float32)
+    if Cp != C:
+        w2 = jnp.pad(w2, (0, Cp - C))      # zero weight ⇒ zero contribution
+    w2 = w2.reshape(Cp, 1)
+    bp = b_last.reshape(1, N)
+
+    out = pl.pallas_call(
+        _fused_decode_agg_kernel,
+        grid=(Mp // bm, Cp // bc),
+        in_specs=[
+            pl.BlockSpec((bc, 1), lambda i, c: (c, 0)),
+            pl.BlockSpec((bc, bm, K), lambda i, c: (c, i, 0)),
+            pl.BlockSpec((K, N), lambda i, c: (0, 0)),
+            pl.BlockSpec((1, N), lambda i, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        interpret=interpret,
+    )(w2, h, w_last, bp)
+    return out[:M]

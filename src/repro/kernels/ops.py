@@ -5,10 +5,16 @@ container, unit tests) they execute with ``interpret=True`` so the *same
 kernel bodies* are validated against the ``ref.py`` oracles. ``bits=4``
 payloads are packed two-nibbles-per-byte here (packing is a reshape+or — not
 worth a kernel).
+
+Kernel-vs-jnp path selection for the codec layer is centralized in
+:func:`use_kernel_default`: TPU backends take the Pallas path automatically,
+everything else the pure-jnp path, with ``REPRO_USE_KERNEL=0|1`` as the
+explicit override (DESIGN.md §7).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +24,31 @@ from repro.kernels.fused_dense import fused_dense
 from repro.kernels.quantize import dequantize_blocks_2d, quantize_blocks_2d
 
 
-def _interpret() -> bool:
+def interpret_default() -> bool:
+    """Whether Pallas kernels should run in interpret mode: everywhere but
+    TPU. The single definition of the predicate — the codec layer and the
+    dispatch wrappers below all route through here."""
     return jax.default_backend() != "tpu"
+
+
+_interpret = interpret_default
+
+
+def use_kernel_default(override: Optional[bool] = None) -> bool:
+    """Resolve the kernel-vs-jnp dispatch for the AE codec hot path.
+
+    Priority: explicit ``override`` argument (a hand-set compressor field) >
+    ``REPRO_USE_KERNEL`` env var (``"0"``/``"1"``) > backend auto-detection
+    (TPU ⇒ kernels compiled natively; CPU/GPU ⇒ pure-jnp, since interpret
+    mode is a validation tool, not a fast path). This replaces the old
+    hand-set ``use_kernel=False`` default that made TPU runs silently take
+    the pure-jnp path."""
+    if override is not None:
+        return bool(override)
+    env = os.environ.get("REPRO_USE_KERNEL")
+    if env is not None and env != "":
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------- quantize
@@ -32,23 +61,37 @@ def quantize_blocks(flat: jax.Array, *, bits: int = 8,
     q, scales = quantize_blocks_2d(blocks, bits=bits, block=block,
                                    interpret=_interpret())
     if bits == 4:
-        qf = q.reshape(-1)
-        lo = (qf[0::2] + 8).astype(jnp.uint8)       # [-7,7] → [1,15]
-        hi = (qf[1::2] + 8).astype(jnp.uint8)
-        q = (lo | (hi << 4)).astype(jnp.uint8)
+        q = pack_nibbles(q)
     return q, scales, orig_len
 
 
-def dequantize_blocks(q: jax.Array, scales: jax.Array, *, bits: int = 8,
-                      block: int = 256, orig_len: int = 0) -> jax.Array:
+def pack_nibbles(q: jax.Array) -> jax.Array:
+    """int8 values in [-7, 7] → two-per-byte uint8 (bits=4 wire format)."""
+    qf = q.reshape(-1)
+    lo = (qf[0::2] + 8).astype(jnp.uint8)           # [-7,7] → [1,15]
+    hi = (qf[1::2] + 8).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(q: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`: uint8 bytes → int8 pairs, flat."""
+    lo = (q.reshape(-1) & 0xF).astype(jnp.int8) - 8
+    hi = ((q.reshape(-1) >> 4) & 0xF).astype(jnp.int8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(-1)
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *, orig_len: int,
+                      bits: int = 8, block: int = 256) -> jax.Array:
+    """Inverse of :func:`quantize_blocks`. ``orig_len`` is mandatory: the
+    padded tail introduced by block alignment is never valid payload, and
+    the old ``orig_len=0 → return the padded vector`` default silently
+    corrupted any caller that forgot to slice."""
+    if orig_len <= 0:
+        raise ValueError(f"orig_len must be positive, got {orig_len}")
     if bits == 4:
-        lo = (q & 0xF).astype(jnp.int8) - 8
-        hi = ((q >> 4) & 0xF).astype(jnp.int8) - 8
-        flatq = jnp.stack([lo, hi], axis=-1).reshape(-1)
-        q = flatq.reshape(-1, block)
+        q = unpack_nibbles(q).reshape(-1, block)
     x = dequantize_blocks_2d(q, scales, block=block, interpret=_interpret())
-    flat = x.reshape(-1)
-    return flat[:orig_len] if orig_len else flat
+    return x.reshape(-1)[:orig_len]
 
 
 # ---------------------------------------------------------------- chunked AE

@@ -40,3 +40,12 @@ def ae_encode_ref(params, cfg, flat: jax.Array) -> jax.Array:
 def ae_decode_ref(params, cfg, z: jax.Array, orig_len: int) -> jax.Array:
     from repro.core import autoencoder as ae
     return ae.chunked_decode(params, cfg, z, orig_len)
+
+
+def fused_decode_agg_ref(h: jax.Array, weights: jax.Array,
+                         w_last: jax.Array, b_last: jax.Array) -> jax.Array:
+    """Oracle for kernels/fused_decode_agg.py: materializes the per-client
+    decoded tensors the kernel exists to avoid, then reduces."""
+    per_client = h.astype(jnp.float32) @ w_last.astype(jnp.float32)
+    return (jnp.einsum("c,cmn->mn", weights.astype(jnp.float32), per_client)
+            + b_last.astype(jnp.float32))

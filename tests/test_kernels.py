@@ -84,6 +84,38 @@ def test_chunked_ae_kernel_matches_jnp(chunk, hidden, latent, n):
                                rtol=1e-4)
 
 
+@pytest.mark.parametrize("C,M,K,N", [(1, 8, 4, 64), (4, 17, 8, 64),
+                                     (8, 128, 32, 256), (3, 100, 64, 130)])
+@pytest.mark.parametrize("bm", [32, 128])
+@pytest.mark.parametrize("bc", [2, 16])     # 2: client-block padding path
+def test_fused_decode_agg_kernel_vs_oracle(C, M, K, N, bm, bc):
+    """The fused decode→aggregate kernel (weights folded into the final
+    decoder matmul, DESIGN.md §7.3) vs the materialize-then-reduce oracle."""
+    from repro.kernels.fused_decode_agg import fused_decode_agg
+    h = jax.random.normal(jax.random.PRNGKey(C * 7 + M), (C, M, K))
+    w = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(C))
+    wl = jax.random.normal(jax.random.PRNGKey(2), (K, N)) * K ** -0.5
+    bl = jax.random.normal(jax.random.PRNGKey(3), (N,))
+    got = fused_decode_agg(h, w, wl, bl, bm=bm, bc=bc, interpret=True)
+    want = ref.fused_decode_agg_ref(h, w, wl, bl)
+    assert got.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_fused_decode_agg_weighting_not_uniform():
+    """A client with weight≈1 dominates: catches a kernel that averages
+    instead of weighting."""
+    from repro.kernels.fused_decode_agg import fused_decode_agg
+    h = jnp.stack([jnp.ones((16, 8)), 100.0 * jnp.ones((16, 8))])
+    w = jnp.array([0.999, 0.001])
+    wl = jnp.eye(8)
+    bl = jnp.zeros((8,))
+    out = fused_decode_agg(h, w, wl, bl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.full((16, 8), 0.999 + 0.1), rtol=1e-5)
+
+
 @pytest.mark.parametrize("B,S,H,KV,D", [(1, 17, 2, 1, 16), (2, 64, 4, 2, 32),
                                         (1, 130, 8, 8, 64)])
 @pytest.mark.parametrize("mode,window", [("causal", None), ("window", 13),

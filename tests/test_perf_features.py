@@ -43,7 +43,12 @@ def test_constrain_activations_applies_in_context():
 def test_fully_shard_adds_data_axis_to_big_leaves():
     from repro.launch.steps import param_shapes
     from repro.models import sharding as shard_lib
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # jax changed the AbstractMesh ctor across 0.4.x: older builds take
+    # (shape, axis_names), 0.4.37+ takes a tuple of (name, size) pairs
+    try:
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:
+        mesh = AbstractMesh((16, 16), ("data", "model"))
     cfg = get_config("llama3-8b")
     shapes = param_shapes(cfg)
     specs = shard_lib.param_specs(shapes, mesh)

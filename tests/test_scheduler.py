@@ -19,9 +19,13 @@ def _federation(n_clients, seed=0, n=512, n_eval=128, alpha=5.0):
 
 
 # ----------------------------------------------------- seed equivalence
-def test_sync_fedavg_reproduces_seed_loop_bit_for_bit():
+def test_sync_fedavg_reproduces_seed_loop():
     """The default scheduler must equal the pre-refactor FederatedRun.run
-    body (re-implemented inline here): same metrics AND same bytes."""
+    body (re-implemented inline here): same bytes exactly, same params to
+    float tolerance. Tolerance, not bit-for-bit: the server now decodes and
+    aggregates the whole cohort in ONE jitted call (DESIGN.md §7), and XLA
+    reassociates the fused subtract+reduce — a ≤1-ulp difference vs the
+    sequential per-client dispatch chain this loop executes."""
     data, ev = _federation(2, alpha=10.0)
     cfg = FLConfig(n_rounds=2, local_epochs=2, lr=2e-3, error_feedback=True)
     comps = [QuantizeCompressor(bits=8) for _ in range(2)]
@@ -60,7 +64,8 @@ def test_sync_fedavg_reproduces_seed_loop_bit_for_bit():
         for a, b in zip(jax.tree_util.tree_leaves(run.global_params)
                         if r == cfg.n_rounds - 1 else [],
                         jax.tree_util.tree_leaves(gp)):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, rtol=1e-5)
 
 
 # ----------------------------------------------------- sampled sync
