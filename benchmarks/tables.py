@@ -28,6 +28,21 @@ def _timeit(fn: Callable, n: int = 5) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _timeit_min(fn: Callable, n: int = 5, warmup: bool = True) -> float:
+    """Best-of-n (not mean): dispatch costs are what the server-path and
+    trainer tables compare, and min is robust to CI scheduler noise. Set
+    ``warmup=False`` for paths that re-trace every call (their compile IS
+    the measured cost)."""
+    if warmup:
+        fn()                               # warmup / compile
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 # =====================================================================
 # Fig. 4/5 — MNIST classifier AE: train, compress, validation model
 # =====================================================================
@@ -387,17 +402,6 @@ def table_fl_decode_agg() -> List[Row]:
     from repro.core import codec, normalize_weights
     from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
 
-    def _timeit_min(fn, n: int = 5) -> float:
-        """Best-of-n (not mean): server-path dispatch costs are what we
-        compare, and min is robust to CI scheduler noise."""
-        fn()                               # warmup / compile
-        best = float("inf")
-        for _ in range(n):
-            t0 = time.perf_counter()
-            fn()
-            best = min(best, time.perf_counter() - t0)
-        return best * 1e6
-
     model = (1 << 20) if FULL else (1 << 15)          # flat update length
     cfg = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
     params = init_chunked_ae(jax.random.PRNGKey(0), cfg)
@@ -454,6 +458,68 @@ def table_fl_decode_agg() -> List[Row]:
 
 
 # =====================================================================
+# jit-native AE trainer (DESIGN.md §8.1) — eager loop vs lax.scan vs
+# cohort-vmap, across cohort sizes
+# =====================================================================
+def table_ae_train() -> List[Row]:
+    """The AE-lifecycle hot path measured directly: fit C clients' AEs on
+    their snapshot buffers. ``eager`` is the per-batch Python loop (one
+    dispatch + one host sync per batch, re-jitted per call — the oracle);
+    ``scan`` is the jit-native trainer called per client; ``cohort`` fits
+    all C in ONE vmapped dispatch. Best-of-n timing (CI noise); compile is
+    excluded by warmup for the scan/cohort paths. The eager loop gets NO
+    warmup on purpose — it rebuilds its jitted closures every call, so a
+    warmup pass would amortize nothing and only double the slowest leg;
+    per-call re-jit is part of the cost being measured."""
+    from repro.configs.paper import AEConfig
+    from repro.core import (train_autoencoder_cohort, train_autoencoder_eager,
+                            train_autoencoder_scan)
+
+    cfg = AEConfig(input_dim=256, encoder_hidden=(64,), latent_dim=8)
+    epochs = 60 if FULL else 30
+    n_snap = 24                            # paper-scale: tens of snapshots
+    z = jax.random.normal(jax.random.PRNGKey(0), (64, n_snap, 4))
+    basis = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.input_dim))
+    all_data = z @ basis + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(2), (64, n_snap, cfg.input_dim))
+    rows: List[Row] = []
+    for cohort in (1, 8, 64):
+        datasets = all_data[:cohort]
+        rngs = jax.random.split(jax.random.PRNGKey(3), cohort)
+
+        def eager():
+            for ci in range(cohort):
+                train_autoencoder_eager(rngs[ci], cfg, datasets[ci],
+                                        epochs=epochs)
+
+        def scan():
+            for ci in range(cohort):
+                train_autoencoder_scan(rngs[ci], cfg, datasets[ci],
+                                       epochs=epochs)
+
+        def cohort_vmap():
+            _, hist = train_autoencoder_cohort(rngs, cfg, datasets,
+                                               epochs=epochs)
+            jax.block_until_ready(hist["loss"])
+
+        # the eager loop is the slow path under test: no warmup (see
+        # docstring) and a single timed pass at the big cohorts
+        t_eager = _timeit_min(eager, n=1 if cohort > 1 else 3, warmup=False)
+        t_scan = _timeit_min(scan, n=3)
+        t_cohort = _timeit_min(cohort_vmap, n=3)
+        rows += [
+            (f"ae_train_eager_c{cohort}", t_eager,
+             f"per-batch host syncs x{cohort} clients"),
+            (f"ae_train_scan_c{cohort}", t_scan,
+             f"speedup={t_eager / max(t_scan, 1e-9):.1f}x vs eager"),
+            (f"ae_train_cohort_c{cohort}", t_cohort,
+             f"speedup={t_eager / max(t_cohort, 1e-9):.1f}x vs eager "
+             f"(one vmapped dispatch)"),
+        ]
+    return rows
+
+
+# =====================================================================
 # roofline summary (reads the dry-run reports if present)
 # =====================================================================
 def table_roofline_summary() -> List[Row]:
@@ -488,5 +554,6 @@ ALL_TABLES = [
     ("kernels", table_kernels),
     ("fl_schedulers", table_fl_schedulers),
     ("fl_decode_agg", table_fl_decode_agg),
+    ("ae_train", table_ae_train),
     ("roofline_summary", table_roofline_summary),
 ]

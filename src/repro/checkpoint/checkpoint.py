@@ -73,12 +73,110 @@ def load_pytree(path: str, like: Pytree) -> Tuple[Pytree, Optional[dict]]:
 
 
 def save_federated_state(path: str, round_idx: int, global_params: Pytree,
+                         clients: Optional[list] = None,
+                         codec_params: Optional[list] = None,
                          extra: Optional[dict] = None):
-    save_pytree(path, {"global": global_params},
-                metadata={"round": round_idx, **(extra or {})})
+    """Checkpoint a federated run: global params plus (optionally) every
+    per-client ``ClientState`` — error-feedback residuals and AE snapshot
+    buffers are *run* state (DESIGN.md §6.3/§8.2); a resume that dropped
+    them would silently reset error feedback and the refit datasets.
+    ``codec_params`` (one AE param pytree or None per client, from
+    ``Compressor.codec_params()``) persists the codecs themselves — under
+    an :class:`AELifecycle` a refit *moves* them, and a resume that rebuilt
+    compressors from the pre-pass would silently revert every decoder
+    while ``last_refresh``/``ae_baseline`` still described the refit one.
+
+    Array-valued state goes into the npz tree; the structural facts needed
+    to rebuild it on load (which clients carry a residual, snapshot buffer
+    shapes, scalar fields) ride in the JSON metadata. The async
+    scheduler's transient ``dispatched`` snapshot is deliberately not
+    persisted — in-flight work restarts from dispatch on resume."""
+    tree: dict = {"global": global_params}
+    cmeta = None
+    codec_meta = None
+    if codec_params is not None:
+        tree["codecs"] = [{"params": p} if p is not None else {}
+                          for p in codec_params]
+        codec_meta = [p is not None for p in codec_params]
+    if clients is not None:
+        ctree, cmeta = [], []
+        for st in clients:
+            entry = {}
+            if st.residual is not None:
+                entry["residual"] = st.residual
+            if st.snapshots:
+                entry["snapshots"] = jnp.stack(st.snapshots)
+            ctree.append(entry)
+            cmeta.append({
+                "has_residual": st.residual is not None,
+                "snap_shape": [len(st.snapshots),
+                               *(np.asarray(st.snapshots[0]).shape
+                                 if st.snapshots else [])],
+                "snap_dtype": (str(np.asarray(st.snapshots[0]).dtype)
+                               if st.snapshots else None),
+                "version": st.version,
+                "last_refresh": st.last_refresh,
+                "ae_baseline": st.ae_baseline,
+            })
+        tree["clients"] = ctree
+    save_pytree(path, tree,
+                metadata={"round": round_idx, "clients": cmeta,
+                          "codecs": codec_meta, **(extra or {})})
 
 
-def load_federated_state(path: str, like_params: Pytree
+def _peek_meta(path: str) -> dict:
+    with np.load(path) as data:
+        if "__meta__" not in data:
+            return {}
+        return json.loads(bytes(data["__meta__"]).decode())
+
+
+def load_federated_state(path: str, like_params: Pytree,
+                         like_codec_params: Optional[list] = None
                          ) -> Tuple[int, Pytree, dict]:
-    tree, meta = load_pytree(path, {"global": like_params})
+    """Restore ``save_federated_state``. Returns (round, global params,
+    meta); when client state was saved, ``meta["client_states"]`` holds the
+    rebuilt ``ClientState`` list (residual structure restored against
+    ``like_params`` — a residual is payload-shaped, i.e. model-shaped).
+    When codec params were saved AND ``like_codec_params`` provides the
+    matching structures (the current compressors' ``codec_params()``),
+    ``meta["codec_params"]`` holds the restored per-client AE param list
+    (None entries for pointwise codecs)."""
+    meta = _peek_meta(path)
+    like: dict = {"global": like_params}
+    codec_meta = meta.get("codecs")
+    if codec_meta is not None and like_codec_params is not None:
+        assert len(codec_meta) == len(like_codec_params)
+        like["codecs"] = [
+            {"params": lp} if has else {}
+            for has, lp in zip(codec_meta, like_codec_params)]
+    cmeta = meta.get("clients")
+    if cmeta is not None:
+        clike = []
+        for cm in cmeta:
+            entry = {}
+            if cm["has_residual"]:
+                entry["residual"] = like_params
+            if cm["snap_shape"][0]:
+                entry["snapshots"] = jnp.zeros(
+                    tuple(cm["snap_shape"]), dtype=cm["snap_dtype"])
+            clike.append(entry)
+        like["clients"] = clike
+    tree, meta = load_pytree(path, like)
+    meta = dict(meta or {})
+    if "codecs" in like:
+        meta["codec_params"] = [entry.get("params")
+                                for entry in tree["codecs"]]
+    if cmeta is not None:
+        from repro.core.scheduler import ClientState
+        states = []
+        for cm, entry in zip(cmeta, tree["clients"]):
+            snaps = entry.get("snapshots")
+            states.append(ClientState(
+                residual=entry.get("residual"),
+                version=int(cm["version"]),
+                snapshots=([s for s in snaps] if snaps is not None else []),
+                last_refresh=int(cm["last_refresh"]),
+                ae_baseline=cm["ae_baseline"]))
+        meta["client_states"] = states
     return int(meta["round"]), tree["global"], meta

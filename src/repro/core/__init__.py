@@ -16,6 +16,7 @@ from repro.core.codec import (  # noqa: F401
     IdentitySpec,
     QuantizeSpec,
     TopKSpec,
+    ae_spec,
     decode_and_aggregate,
     decode_and_aggregate_sharded,
     decode_batched,
@@ -33,6 +34,8 @@ from repro.core.autoencoder import (  # noqa: F401
     conv_decode,
     conv_encode,
     decoder_param_count,
+    decoder_sync_bytes,
+    decoder_tree,
     fc_decode,
     fc_encode,
     fc_reconstruct,
@@ -40,7 +43,11 @@ from repro.core.autoencoder import (  # noqa: F401
     init_conv_ae,
     init_fc_ae,
     train_autoencoder,
+    train_autoencoder_cohort,
+    train_autoencoder_eager,
+    train_autoencoder_scan,
 )
+from repro.core.lifecycle import AELifecycle  # noqa: F401
 from repro.core.compressor import (  # noqa: F401
     ChunkedAECompressor,
     ComposedCompressor,
@@ -73,4 +80,9 @@ from repro.core.scheduler import (  # noqa: F401
     SampledSync,
     SyncFedAvg,
 )
-from repro.core.savings import SavingsModel, sweep_collaborators, sweep_rounds  # noqa: F401
+from repro.core.savings import (  # noqa: F401
+    SavingsModel,
+    reconcile,
+    sweep_collaborators,
+    sweep_rounds,
+)

@@ -21,6 +21,7 @@ AE state, so compression is scale-free across rounds.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -244,7 +245,75 @@ def fit_normalizer(params: Params, dataset: jax.Array) -> Params:
     return dict(params, norm={"mean": mean, "std": std})
 
 
-def train_autoencoder(
+def _train_setup(rng: jax.Array, cfg, dataset: jax.Array, *, kind: str,
+                 batch_size: int, val_fraction: float,
+                 init: Optional[Params],
+                 refit_normalizer: Optional[bool]
+                 ) -> Tuple[Params, jax.Array, jax.Array, jax.Array, int]:
+    """Shared trainer prologue (split/init/normalizer) for the eager oracle
+    and the scan trainer — one definition so the two paths see identical
+    train/val splits, initial params, and normalizer state.
+
+    Warm-start semantics (explicit, DESIGN.md §8.2): passing ``init`` warms
+    the *weights only* — Adam moments and the bias-correction step always
+    restart fresh, and the normalizer is kept as-is unless
+    ``refit_normalizer=True`` (a refit rescales what the latents mean, so a
+    warm start keeps the old statistics by default; a fresh init always
+    fits them, since mean=0/std=1 is a placeholder)."""
+    n = dataset.shape[0]
+    n_val = max(1, int(n * val_fraction)) if n > 2 else 0
+    k_init, k_shuf, k_split = jax.random.split(rng, 3)
+    # random (not tail) val split: the tail snapshots are the converged
+    # weights the codec most needs to reconstruct — don't hold them all out
+    order = jax.random.permutation(k_split, n)
+    shuffled_all = dataset[order]
+    train_set, val_set = shuffled_all[:n - n_val], shuffled_all[n - n_val:]
+    if init is None:
+        params = init_fc_ae(k_init, cfg) if kind == "fc" \
+            else init_conv_ae(k_init, cfg)
+        refit = True if refit_normalizer is None else refit_normalizer
+    else:
+        params = init
+        refit = False if refit_normalizer is None else refit_normalizer
+    if refit:
+        params = fit_normalizer(params, train_set)
+    bs = min(batch_size, max(1, train_set.shape[0]))
+    return params, train_set, val_set, k_shuf, bs
+
+
+def _masked_ae_loss(params: Params, cfg, xb: jax.Array, wb: jax.Array,
+                    kind: str) -> jax.Array:
+    """Eq.-3 MSE over a batch with a 0/1 row mask ``wb`` — equals
+    ``ae_loss`` on the unmasked rows (tail batches ride in a full-width
+    batch with padding rows masked to exactly zero contribution)."""
+    if kind == "fc":
+        x_hat = fc_reconstruct(params, cfg, xb)
+    elif kind == "conv":
+        x_hat = conv_decode(params, cfg, conv_encode(params, cfg, xb))
+    else:
+        raise ValueError(kind)
+    sq = jnp.square(xb - x_hat)
+    per_row = sq.reshape(sq.shape[0], -1)
+    denom = jnp.sum(wb) * per_row.shape[1]
+    return jnp.sum(per_row * wb[:, None]) / denom
+
+
+def _adam_update(p: Params, g: Params, m: Params, v: Params, t, lr):
+    """One Adam step (shared by the eager oracle and the scan trainer so
+    their op chains are identical; ``t`` is the 1-based bias-correction
+    step)."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+
+    def upd(pl, ml, vl):
+        mh = ml / (1 - b1 ** t)
+        vh = vl / (1 - b2 ** t)
+        return pl - lr * mh / (jnp.sqrt(vh) + eps)
+    return jax.tree_util.tree_map(upd, p, m, v), m, v
+
+
+def train_autoencoder_eager(
     rng: jax.Array,
     cfg,
     dataset: jax.Array,              # (n_samples, input_dim) weight vectors
@@ -257,47 +326,31 @@ def train_autoencoder(
                          # budget — see §Perf iteration log in DESIGN.md
     val_fraction: float = 0.2,
     init: Optional[Params] = None,
+    refit_normalizer: Optional[bool] = None,
 ) -> Tuple[Params, Dict[str, list]]:
-    """Train an AE on a weights dataset; returns (params, history)."""
-    n = dataset.shape[0]
-    n_val = max(1, int(n * val_fraction)) if n > 2 else 0
-    k_init, k_shuf, k_split = jax.random.split(rng, 3)
-    # random (not tail) val split: the tail snapshots are the converged
-    # weights the codec most needs to reconstruct — don't hold them all out
-    order = jax.random.permutation(k_split, n)
-    shuffled_all = dataset[order]
-    train_set, val_set = shuffled_all[:n - n_val], shuffled_all[n - n_val:]
-    if init is None:
-        if kind == "fc":
-            params = init_fc_ae(k_init, cfg)
-        else:
-            params = init_conv_ae(k_init, cfg)
-    else:
-        params = init
-    params = fit_normalizer(params, train_set)
+    """The eager epoch/batch-loop trainer — kept as the oracle the scan
+    trainer is asserted against (DESIGN.md §8.1). One Python dispatch plus a
+    host sync per batch; use :func:`train_autoencoder` (scan) on hot paths.
 
-    # Adam state
+    Every sample trains every epoch: the trailing partial batch is included
+    (a ``bs``-aligned loop would silently drop up to ``bs-1`` of the paper's
+    tens-of-snapshots datasets per epoch)."""
+    params, train_set, val_set, k_shuf, bs = _train_setup(
+        rng, cfg, dataset, kind=kind, batch_size=batch_size,
+        val_fraction=val_fraction, init=init,
+        refit_normalizer=refit_normalizer)
+    n_val = val_set.shape[0]
+
+    # Adam state: always fresh, also under warm starts (see _train_setup)
     m = jax.tree_util.tree_map(jnp.zeros_like, params)
     v = jax.tree_util.tree_map(jnp.zeros_like, params)
 
     loss_grad = jax.jit(jax.value_and_grad(
         lambda p, x: ae_loss(p, cfg, x, kind)))
     acc_fn = jax.jit(lambda p, x: ae_accuracy(p, cfg, x, kind))
-
-    @jax.jit
-    def adam_update(p, g, m, v, t):
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
-        v = jax.tree_util.tree_map(
-            lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
-        def upd(pl, ml, vl):
-            mh = ml / (1 - b1 ** t)
-            vh = vl / (1 - b2 ** t)
-            return pl - lr * mh / (jnp.sqrt(vh) + eps)
-        return jax.tree_util.tree_map(upd, p, m, v), m, v
+    adam = jax.jit(_adam_update)
 
     history = {"loss": [], "accuracy": [], "val_loss": [], "val_accuracy": []}
-    bs = min(batch_size, max(1, train_set.shape[0]))
     step = 0
     for epoch in range(epochs):
         k_shuf, k = jax.random.split(k_shuf)
@@ -305,14 +358,14 @@ def train_autoencoder(
         shuffled = train_set[order]
         ep_loss = 0.0
         nb = 0
-        for i in range(0, shuffled.shape[0] - bs + 1, bs):
-            xb = shuffled[i:i + bs]
+        for i in range(0, shuffled.shape[0], bs):
+            xb = shuffled[i:i + bs]          # tail batch may be < bs
             loss, g = loss_grad(params, xb)
             # norm stats are data statistics, not trainable
             g = dict(g, norm=jax.tree_util.tree_map(jnp.zeros_like,
                                                     g["norm"]))
             step += 1
-            params, m, v = adam_update(params, g, m, v, step)
+            params, m, v = adam(params, g, m, v, step, lr)
             ep_loss += float(loss)
             nb += 1
         history["loss"].append(ep_loss / max(nb, 1))
@@ -324,6 +377,159 @@ def train_autoencoder(
     return params, history
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "kind", "epochs", "bs"))
+def _scan_fit(params: Params, train_set: jax.Array, val_set: jax.Array,
+              key: jax.Array, lr, *, cfg, kind: str, epochs: int, bs: int
+              ) -> Tuple[Params, Dict[str, jax.Array]]:
+    """The jit-native trainer core: ``scan(epochs) ∘ scan(batches)`` with
+    (params, Adam moments, step, shuffle key) as the carry and the per-epoch
+    metric row as the scan output — zero host syncs anywhere inside
+    (DESIGN.md §8.1). Batches are a static ``(nb, bs)`` index grid over the
+    epoch permutation; the tail batch is padded to ``bs`` and masked, which
+    reproduces the eager oracle's partial-batch loss exactly."""
+    n_train = train_set.shape[0]
+    nb = -(-n_train // bs)
+    flat_idx = jnp.arange(nb * bs)
+    idx = jnp.minimum(flat_idx, n_train - 1).reshape(nb, bs)
+    mask = (flat_idx < n_train).astype(train_set.dtype).reshape(nb, bs)
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def epoch_body(carry, _):
+        p, m, v, step, k_shuf = carry
+        ks = jax.random.split(k_shuf)
+        k_shuf, k = ks[0], ks[1]
+        order = jax.random.permutation(k, n_train)
+        shuffled = train_set[order]
+
+        def batch_body(c, batch_i):
+            p, m, v, step = c
+            xb = shuffled[idx[batch_i]]
+            wb = mask[batch_i]
+            loss, g = jax.value_and_grad(_masked_ae_loss)(
+                p, cfg, xb, wb, kind)
+            # norm stats are data statistics, not trainable
+            g = dict(g, norm=jax.tree_util.tree_map(jnp.zeros_like,
+                                                    g["norm"]))
+            step = step + 1
+            p, m, v = _adam_update(p, g, m, v, step, lr)
+            return (p, m, v, step), loss
+
+        (p, m, v, step), losses = jax.lax.scan(
+            batch_body, (p, m, v, step), jnp.arange(nb))
+        row = {"loss": jnp.sum(losses) / nb,
+               "accuracy": ae_accuracy(p, cfg, train_set, kind)}
+        if val_set.shape[0]:
+            row["val_loss"] = ae_loss(p, cfg, val_set, kind)
+            row["val_accuracy"] = ae_accuracy(p, cfg, val_set, kind)
+        return (p, m, v, step, k_shuf), row
+
+    init_carry = (params, zeros, zeros, jnp.int32(0), key)
+    (params, _, _, _, _), hist = jax.lax.scan(
+        epoch_body, init_carry, None, length=epochs)
+    return params, hist
+
+
+def train_autoencoder_scan(
+    rng: jax.Array,
+    cfg,
+    dataset: jax.Array,
+    *,
+    kind: str = "fc",
+    epochs: int = 200,
+    batch_size: int = 8,
+    lr: float = 3e-3,
+    val_fraction: float = 0.2,
+    init: Optional[Params] = None,
+    refit_normalizer: Optional[bool] = None,
+) -> Tuple[Params, Dict[str, list]]:
+    """Jit-native AE trainer: identical math to the eager oracle (same
+    split, same Adam op chain, same masked tail batch), staged as one XLA
+    computation — the only host sync is materializing the final history.
+    Equivalence is float-tolerance, not bit-for-bit (XLA reassociates the
+    fused epoch reductions; tested in tests/test_ae_lifecycle.py)."""
+    params, train_set, val_set, k_shuf, bs = _train_setup(
+        rng, cfg, dataset, kind=kind, batch_size=batch_size,
+        val_fraction=val_fraction, init=init,
+        refit_normalizer=refit_normalizer)
+    params, hist = _scan_fit(params, train_set, val_set, k_shuf,
+                             jnp.float32(lr), cfg=cfg, kind=kind,
+                             epochs=epochs, bs=bs)
+    history = {k: np_list(v) for k, v in hist.items()}
+    # oracle contract: the eager history always carries the val keys (empty
+    # lists when there is no val split, i.e. n <= 2)
+    history.setdefault("val_loss", [])
+    history.setdefault("val_accuracy", [])
+    return params, history
+
+
+def np_list(x: jax.Array) -> list:
+    """Stacked per-epoch metrics → plain floats (the one host sync)."""
+    return [float(e) for e in x]
+
+
+def train_autoencoder(
+    rng: jax.Array,
+    cfg,
+    dataset: jax.Array,
+    *,
+    kind: str = "fc",
+    epochs: int = 200,
+    batch_size: int = 8,
+    lr: float = 3e-3,
+    val_fraction: float = 0.2,
+    init: Optional[Params] = None,
+    refit_normalizer: Optional[bool] = None,
+    method: str = "scan",
+) -> Tuple[Params, Dict[str, list]]:
+    """Train an AE on a weights dataset; returns (params, history).
+
+    ``method="scan"`` (default) runs the jit-native ``lax.scan`` trainer;
+    ``method="eager"`` runs the per-batch Python loop kept as its oracle
+    (DESIGN.md §8.1)."""
+    fit = {"scan": train_autoencoder_scan,
+           "eager": train_autoencoder_eager}[method]
+    return fit(rng, cfg, dataset, kind=kind, epochs=epochs,
+               batch_size=batch_size, lr=lr, val_fraction=val_fraction,
+               init=init, refit_normalizer=refit_normalizer)
+
+
+def train_autoencoder_cohort(
+    rngs: jax.Array,                 # (C, key) — one PRNG key per client
+    cfg,
+    datasets: jax.Array,             # (C, n_samples, input_dim)
+    *,
+    kind: str = "fc",
+    epochs: int = 200,
+    batch_size: int = 8,
+    lr: float = 3e-3,
+    val_fraction: float = 0.2,
+    init: Optional[Params] = None,   # stacked params, leading client axis
+    refit_normalizer: Optional[bool] = None,
+) -> Tuple[Params, Dict[str, jax.Array]]:
+    """Fit C autoencoders in ONE jitted dispatch: the whole trainer —
+    split, init, normalizer, and the scan loops — is ``vmap``ed over a
+    leading client axis, mirroring ``local_train_batched`` for classifier
+    training (DESIGN.md §8.1). Per-client shuffles/inits come from the
+    per-client keys, so each lane equals a sequential
+    :func:`train_autoencoder_scan` fit with the same key (float tolerance).
+
+    Returns (stacked params with leading client axis, history dict of
+    ``(C, epochs)`` arrays)."""
+    def one(rng, dataset, init_p):
+        params, train_set, val_set, k_shuf, bs = _train_setup(
+            rng, cfg, dataset, kind=kind, batch_size=batch_size,
+            val_fraction=val_fraction, init=init_p,
+            refit_normalizer=refit_normalizer)
+        return _scan_fit(params, train_set, val_set, k_shuf,
+                         jnp.float32(lr), cfg=cfg, kind=kind,
+                         epochs=epochs, bs=bs)
+
+    if init is None:
+        return jax.vmap(lambda r, d: one(r, d, None))(rngs, datasets)
+    return jax.vmap(one)(rngs, datasets, init)
+
+
 def ae_param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree_util.tree_leaves(
         {"enc": params["enc"], "dec": params["dec"]}))
@@ -332,3 +538,17 @@ def ae_param_count(params: Params) -> int:
 def decoder_param_count(params: Params) -> int:
     """Size of the decoder half — the pre-pass shipping cost (Eq. 5/6)."""
     return sum(x.size for x in jax.tree_util.tree_leaves(params["dec"]))
+
+
+def decoder_tree(params: Params) -> Params:
+    """Exactly what a collaborator ships for one decoder sync: the decoder
+    stack plus the (mean, std) normalizer the server-side decode denorms
+    with (DESIGN.md §8.3). The encoder never crosses the wire."""
+    return {"dec": params["dec"], "norm": params["norm"]}
+
+
+def decoder_sync_bytes(params: Params) -> float:
+    """Wire bytes of one decoder sync — what the schedulers charge to
+    ``RoundRecord.bytes_down`` per shipped decoder (DESIGN.md §8.3)."""
+    return float(sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(decoder_tree(params))))

@@ -101,6 +101,17 @@ CodecSpec = Union[IdentitySpec, QuantizeSpec, TopKSpec, FCAESpec,
                   ChunkedAESpec, ComposedSpec]
 
 
+def ae_spec(spec: CodecSpec) -> Optional[Union[FCAESpec, ChunkedAESpec]]:
+    """The AE spec inside ``spec`` (unwrapping ``ComposedSpec``), or None
+    for the pointwise codecs — how the AE lifecycle (DESIGN.md §8) finds
+    the chunking/shape config to build refit datasets with."""
+    if isinstance(spec, ComposedSpec):
+        return ae_spec(spec.inner)
+    if isinstance(spec, (FCAESpec, ChunkedAESpec)):
+        return spec
+    return None
+
+
 def latent_shape(spec: Union[FCAESpec, ChunkedAESpec]) -> Tuple[int, ...]:
     """Static shape of the AE latent payload entry ``z``."""
     if isinstance(spec, FCAESpec):

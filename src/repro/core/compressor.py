@@ -101,6 +101,13 @@ class Compressor:
         """AE parameter pytree for the AE codecs; None for pointwise ones."""
         return None
 
+    def ae_compressor(self) -> Optional["Compressor"]:
+        """The AE-backed compressor inside this adapter: ``self`` for the AE
+        codecs, the wrapped inner one for ``Composed``, ``None`` for the
+        pointwise codecs. The AE lifecycle (DESIGN.md §8) uses this to find
+        the refittable params behind whatever adapter a client runs."""
+        return None
+
     def encode(self, update: Pytree) -> Pytree:
         flat, _ = ravel_pytree(update)
         spec = self.spec(flat.size)
@@ -169,6 +176,9 @@ class FCAECompressor(Compressor):
     def codec_params(self):
         return self.params
 
+    def ae_compressor(self):
+        return self
+
 
 @dataclasses.dataclass
 class ChunkedAECompressor(Compressor):
@@ -192,6 +202,9 @@ class ChunkedAECompressor(Compressor):
     def codec_params(self):
         return self.params
 
+    def ae_compressor(self):
+        return self
+
 
 @dataclasses.dataclass
 class ComposedCompressor(Compressor):
@@ -212,3 +225,6 @@ class ComposedCompressor(Compressor):
 
     def codec_params(self):
         return self.inner.codec_params()
+
+    def ae_compressor(self):
+        return self.inner.ae_compressor()

@@ -61,12 +61,19 @@ class RoundRecord:
     bytes_up: float                    # collaborator→server this round
     bytes_up_raw: float                # uncompressed equivalent
     compression_ratio: float
-    # scheduler-layer accounting (DESIGN.md §6.1). Downlink is the global-
-    # model broadcast to each participant — uncompressed in this scheme, so
-    # bytes_down == bytes_down_raw today; both are kept so a compressed-
-    # broadcast codec slots in without a record change.
-    bytes_down: float = 0.0            # server→collaborator this round
+    # scheduler-layer accounting (DESIGN.md §6.1/§8.3). ``bytes_down`` is
+    # the model-sync plane: the global-model broadcast to each participant
+    # PLUS any decoder syncs the AE lifecycle shipped this round (both
+    # uncompressed, so down == down_raw; the split keeps ``bytes_up`` the
+    # pure per-round update traffic Eq. 4's numerator/denominator compare,
+    # while the decoder Cost term of Eq. 5/6 lands in the records instead
+    # of being silently dropped). ``bytes_decoder`` itemizes the decoder
+    # share of ``bytes_down``; ``ae_syncs`` lists which clients shipped a
+    # decoder (initial or refit) — ``savings.reconcile`` consumes both.
+    bytes_down: float = 0.0            # server↔collaborator model syncs
     bytes_down_raw: float = 0.0
+    bytes_decoder: float = 0.0         # decoder-sync share of bytes_down
+    ae_syncs: Optional[List[int]] = None        # clients that shipped one
     participants: Optional[List[int]] = None    # client ids in this round
     staleness: Optional[List[int]] = None       # async only, per participant
     sim_time: float = 0.0              # async only: simulated clock
@@ -87,6 +94,7 @@ class FederatedRun:
         compressors: Optional[Sequence[Compressor]] = None,
         eval_data: Optional[Dict[str, jnp.ndarray]] = None,
         scheduler: Optional[RoundScheduler] = None,
+        lifecycle: Optional["AELifecycle"] = None,
     ):
         self.clf_cfg = clf_cfg
         self.datasets = list(datasets)
@@ -101,6 +109,8 @@ class FederatedRun:
             jax.random.PRNGKey(fl_cfg.seed), clf_cfg)
         self.clients = [ClientState() for _ in range(n)]
         self.history: List[RoundRecord] = []
+        self.round_offset = 0              # set by load_state on resume
+        self.lifecycle = lifecycle
         self.scheduler = scheduler if scheduler is not None else SyncFedAvg()
         self.scheduler.bind(self)
 
@@ -114,7 +124,9 @@ class FederatedRun:
     # ------------------------------------------------------------------
     def run(self, progress: Optional[Callable[[RoundRecord], None]] = None
             ) -> List[RoundRecord]:
-        start = len(self.history)          # run() is resumable
+        # run() is resumable: within a process via the history length, and
+        # across processes via load_state()'s round offset
+        start = self.round_offset + len(self.history)
         for r in range(start, start + self.cfg.n_rounds):
             rec = self.scheduler.run_round(r)
             self.history.append(rec)
@@ -127,10 +139,55 @@ class FederatedRun:
         up = sum(r.bytes_up for r in self.history)
         raw = sum(r.bytes_up_raw for r in self.history)
         down = sum(r.bytes_down for r in self.history)
+        dec = sum(r.bytes_decoder for r in self.history)
         return {"bytes_up": up, "bytes_up_raw": raw,
                 "bytes_down": down,
+                "bytes_decoder": dec,
                 "bytes_total": up + down,
                 "effective_ratio": raw / max(up, 1.0)}
+
+    # ------------------------------------------------------------------
+    def savings_report(self, model: "SavingsModel") -> Dict[str, float]:
+        """Reconcile this run's observed byte accounting against the
+        paper's Eq. 4–6 analytics (``savings.reconcile``, DESIGN.md §8.3)."""
+        from repro.core.savings import reconcile
+        return reconcile(model, self.history)
+
+    # ------------------------------------------------------------------
+    def save_state(self, path: str) -> None:
+        """Checkpoint the resumable run state: round index, global params,
+        every ``ClientState`` (error-feedback residuals, AE snapshot
+        buffers, lifecycle scalars) AND the per-client AE codec params —
+        an ``AELifecycle`` refit moves the compressors, so resuming must
+        not silently revert any decoder to its pre-pass state."""
+        from repro.checkpoint.checkpoint import save_federated_state
+        save_federated_state(
+            path, self.round_offset + len(self.history), self.global_params,
+            clients=self.clients,
+            codec_params=[c.codec_params() for c in self.compressors])
+
+    def load_state(self, path: str) -> int:
+        """Restore a checkpoint into this (freshly constructed) run;
+        subsequent ``run()`` calls continue from the saved round. Sync
+        schedulers resume exactly; ``AsyncBuffered``'s in-flight event heap
+        is not persisted (its clients restart from dispatch). Returns the
+        next round index."""
+        from repro.checkpoint.checkpoint import load_federated_state
+        rnd, params, meta = load_federated_state(
+            path, self.global_params,
+            like_codec_params=[c.codec_params() for c in self.compressors])
+        self.global_params = params
+        if meta.get("client_states") is not None:
+            assert len(meta["client_states"]) == len(self.clients)
+            self.clients = meta["client_states"]
+        for comp, restored in zip(self.compressors,
+                                  meta.get("codec_params") or []):
+            if restored is not None:
+                comp.ae_compressor().params = restored
+        self.history = []
+        self.round_offset = rnd
+        self.scheduler.on_restore()        # rebuild client-derived state
+        return rnd
 
 
 # =====================================================================

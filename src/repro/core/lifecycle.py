@@ -1,0 +1,205 @@
+"""AE training lifecycle: per-round snapshot buffers, refresh scheduling,
+and honest decoder-sync accounting (DESIGN.md §8).
+
+The paper's mechanism is dynamic: each collaborator trains its autoencoder
+on its *own* stream of weight-update snapshots and re-ships the decoder to
+the aggregator whenever the codec is refit — that decoder traffic is the
+``Cost`` term of the savings ratio (Eq. 5/6), and a scheme that never pays
+it is quietly cheating the paper's own trade-off. :class:`AELifecycle` makes
+the loop first-class for every scheduler:
+
+* **snapshot buffers** — each AE-backed client keeps a bounded ring of the
+  flat payload vectors it actually encoded (post error-feedback, i.e. the
+  codec's true input distribution), stored in ``ClientState.snapshots`` so
+  the buffer survives unsampled rounds and checkpoints with the run;
+* **refresh triggers** — a round cadence (``refresh_every``) and/or a
+  reconstruction-drift trigger (``drift_ratio``: refit once the relative
+  reconstruction error of the newest snapshot exceeds that multiple of the
+  post-refresh baseline);
+* **warm-start refits** — refits run the jit-native scan trainer
+  (DESIGN.md §8.1) warm-started from the current params (fresh Adam
+  moments, normalizer kept unless ``refit_normalizer``); clients refitting
+  in the same round with the same AE shape are grouped into ONE
+  ``train_autoencoder_cohort`` dispatch;
+* **decoder-sync accounting** — every shipped decoder (the initial
+  pre-pass decoder on first participation, then one per refresh) is charged
+  to ``RoundRecord.bytes_down``/``bytes_down_raw`` and itemized in
+  ``RoundRecord.bytes_decoder``/``ae_syncs``; ``savings.reconcile``
+  cross-checks those observed totals against Eq. 4–6 (DESIGN.md §8.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autoencoder as ae
+from repro.core import codec
+
+Pytree = Any
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _rel_recon_err(spec: codec.CodecSpec, params: Optional[Pytree],
+                   flat: jax.Array) -> jax.Array:
+    """Scale-free codec fidelity probe: MSE of an encode→decode roundtrip
+    over the variance of the input. Relative, so weight-magnitude growth
+    across rounds does not masquerade as drift."""
+    decoded = codec.decode(spec, params, codec.encode(spec, params, flat))
+    num = jnp.mean(jnp.square(flat - decoded))
+    den = jnp.mean(jnp.square(flat - jnp.mean(flat))) + 1e-12
+    return num / den
+
+
+@dataclasses.dataclass
+class AELifecycle:
+    """Policy object consumed by all three schedulers (DESIGN.md §8.2).
+
+    Stateless apart from its config: all per-client lifecycle state
+    (snapshot buffer, last refresh round, drift baseline) lives in
+    ``ClientState`` so it checkpoints and survives partial participation.
+    At least one of ``refresh_every``/``drift_ratio`` should be set for
+    refits to ever trigger; with both unset the lifecycle still ships (and
+    accounts) the initial pre-pass decoders."""
+
+    refresh_every: Optional[int] = None   # cadence: refit every k-th round
+    drift_ratio: Optional[float] = None   # refit at err > ratio * baseline
+    buffer_size: int = 16                 # snapshots kept per client
+    min_snapshots: int = 4                # don't refit on fewer samples
+    refresh_epochs: int = 40
+    batch_size: int = 8
+    lr: float = 3e-3
+    val_fraction: float = 0.2
+    refit_normalizer: bool = False        # warm starts keep norm by default
+    ship_initial: bool = True             # charge the pre-pass decoder ship
+    seed: int = 0
+
+    # ------------------------------------------------------------------
+    def observe(self, state, compressor, flat: jax.Array) -> None:
+        """Record the flat vector a client just encoded (called from the
+        schedulers' shared ``_encode_local``). Pointwise codecs have
+        nothing to refit, so only AE-backed clients buffer."""
+        if compressor.ae_compressor() is None:
+            return
+        state.snapshots.append(jnp.asarray(flat))
+        del state.snapshots[:-self.buffer_size]
+
+    # ------------------------------------------------------------------
+    def end_of_round(self, run, r: int, participants: Sequence[int]
+                     ) -> Tuple[float, List[int]]:
+        """Advance the lifecycle after round ``r``'s aggregation: decide
+        refreshes for this round's participants, refit (cohort-batched
+        where possible), and return ``(decoder_bytes, synced_client_ids)``
+        for the scheduler's RoundRecord. Runs *after* the server aggregate
+        on purpose — this round's payloads were decoded with the decoder
+        that encoded them; a refreshed decoder takes effect next round."""
+        bytes_dec = 0.0
+        synced: List[int] = []
+        todo: List[int] = []
+        for ci in sorted(set(participants)):
+            comp = run.compressors[ci].ae_compressor()
+            if comp is None:
+                continue
+            st = run.clients[ci]
+            if st.last_refresh < 0:
+                # first participation: the pre-pass decoder the server has
+                # been decoding with gets charged here (one Eq.-5 sync)
+                st.last_refresh = r
+                if self.ship_initial:
+                    bytes_dec += ae.decoder_sync_bytes(comp.codec_params())
+                    synced.append(ci)
+                st.ae_baseline = self._baseline(comp, st)
+                continue
+            if self._should_refresh(r, comp, st):
+                todo.append(ci)
+        for ci, new_params in self._refit(run, r, todo):
+            comp = run.compressors[ci].ae_compressor()
+            comp.params = new_params
+            st = run.clients[ci]
+            st.last_refresh = r
+            st.ae_baseline = self._baseline(comp, st)
+            bytes_dec += ae.decoder_sync_bytes(new_params)
+            synced.append(ci)
+        return bytes_dec, synced
+
+    # ------------------------------------------------------------------
+    def _should_refresh(self, r: int, comp, st) -> bool:
+        if len(st.snapshots) < self.min_snapshots:
+            return False
+        if (self.refresh_every is not None
+                and r - st.last_refresh >= self.refresh_every):
+            return True
+        if self.drift_ratio is not None and st.ae_baseline is not None:
+            err = self._rel_err(comp, st.snapshots[-1])
+            return err > self.drift_ratio * st.ae_baseline
+        return False
+
+    def _rel_err(self, comp, flat: jax.Array) -> float:
+        spec = comp.spec(flat.size)
+        return float(_rel_recon_err(spec, comp.codec_params(), flat))
+
+    def _baseline(self, comp, st) -> Optional[float]:
+        if not st.snapshots:
+            return None
+        return self._rel_err(comp, st.snapshots[-1])
+
+    # ------------------------------------------------------------------
+    def _refit_dataset(self, comp, st) -> Tuple[Any, jax.Array]:
+        """(fc-config, training rows) for one client's refit. FCAE trains
+        on padded snapshot rows; the chunked AE trains its shared funnel on
+        every chunk of every snapshot."""
+        spec = codec.ae_spec(comp.spec(st.snapshots[0].shape[0]))
+        stackd = jnp.stack(st.snapshots)
+        if isinstance(spec, codec.FCAESpec):
+            pad = spec.cfg.input_dim - stackd.shape[1]
+            if pad:
+                stackd = jnp.pad(stackd, ((0, 0), (0, pad)))
+            return spec.cfg, stackd
+        assert isinstance(spec, codec.ChunkedAESpec)
+        rows = jnp.concatenate([
+            ae.chunk_vector(s, spec.cfg.chunk_size)[0] for s in st.snapshots])
+        return spec.cfg.as_fc(), rows
+
+    def _rng(self, r: int, ci: int) -> jax.Array:
+        return jax.random.PRNGKey(
+            (self.seed * 1_000_003 + r * 1009 + ci) % 2 ** 31)
+
+    def _refit(self, run, r: int, todo: List[int]
+               ) -> List[Tuple[int, Pytree]]:
+        """Warm-start refits for ``todo``, grouping same-shaped fits into
+        one ``train_autoencoder_cohort`` dispatch (DESIGN.md §8.1)."""
+        groups: Dict[Tuple[Any, Tuple[int, ...]], List[Tuple[int, jax.Array]]]
+        groups = {}
+        for ci in todo:
+            comp = run.compressors[ci].ae_compressor()
+            fc_cfg, rows = self._refit_dataset(comp, run.clients[ci])
+            groups.setdefault((fc_cfg, rows.shape), []).append((ci, rows))
+
+        out: List[Tuple[int, Pytree]] = []
+        kw = dict(epochs=self.refresh_epochs, batch_size=self.batch_size,
+                  lr=self.lr, val_fraction=self.val_fraction,
+                  refit_normalizer=self.refit_normalizer)
+        for (fc_cfg, _), members in groups.items():
+            if len(members) == 1:
+                ci, rows = members[0]
+                comp = run.compressors[ci].ae_compressor()
+                params, _ = ae.train_autoencoder_scan(
+                    self._rng(r, ci), fc_cfg, rows,
+                    init=comp.codec_params(), **kw)
+                out.append((ci, params))
+                continue
+            rngs = jnp.stack([self._rng(r, ci) for ci, _ in members])
+            datasets = jnp.stack([rows for _, rows in members])
+            init = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[run.compressors[ci].ae_compressor().codec_params()
+                  for ci, _ in members])
+            stacked, _ = ae.train_autoencoder_cohort(
+                rngs, fc_cfg, datasets, init=init, **kw)
+            for k, (ci, _) in enumerate(members):
+                out.append((ci, jax.tree_util.tree_map(
+                    lambda x, k=k: x[k], stacked)))
+        return out

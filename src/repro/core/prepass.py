@@ -181,8 +181,9 @@ def run_prepass(
     collect_updates: bool = False,
 ) -> Dict[str, Any]:
     """Full pre-pass for one collaborator: local training → weights dataset →
-    AE training. ``collect_updates=True`` stores per-epoch *deltas* from the
-    initial weights instead of raw weights (the FL-mode codec target)."""
+    AE training (the jit-native scan trainer, DESIGN.md §8.1).
+    ``collect_updates=True`` stores per-epoch *deltas* from the initial
+    weights instead of raw weights (the FL-mode codec target)."""
     k_model, k_ae = jax.random.split(rng)
     params0 = init_classifier(k_model, clf_cfg)
     flat0, _ = ravel_pytree(params0)

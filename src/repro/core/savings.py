@@ -6,11 +6,16 @@ Cost = DecoderSize * NumDecoders = (AutoencoderSize / 2) * NumDecoders.
                                                               (Eq. 5/6)
 Sizes are in parameter counts (the paper's unit); bytes scale both sides
 equally so the ratio is unit-free.
+
+:func:`reconcile` closes the loop with the runtime (DESIGN.md §8.3): the
+schedulers now *observe* every term of Eq. 4–6 — compressed/raw uplink per
+round, and one decoder sync per ``ae_syncs`` entry — so the analytic model
+can be cross-checked against what a run actually shipped.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +79,47 @@ def sweep_collaborators(model: SavingsModel, comm_rounds: int,
 def sweep_rounds(model: SavingsModel, collabs: int,
                  rounds: List[int]) -> List[float]:
     return [model.savings_ratio(r, collabs) for r in rounds]
+
+
+def reconcile(model: SavingsModel, records: Sequence,
+              *, bytes_per_param: float = 4.0) -> Dict[str, float]:
+    """Reconcile a run's observed accounting with Eq. 4–6 (DESIGN.md §8.3).
+
+    ``records`` is the run's ``RoundRecord`` history. Observed quantities
+    come straight from the scheduler layer: uplink bytes (compressed and
+    raw) and the decoder-sync bytes the AE lifecycle charged. Predictions
+    restate Eq. 4–6 in observed-byte units — predicted decoder cost is
+    ``DecoderSize × observed sync count`` (Eq. 5 with NumDecoders = the
+    syncs that actually happened; under refreshes a decoder ships more than
+    once, which Fig. 10/11's static Cost term underestimates), and the
+    predicted savings ratio divides raw traffic by (raw / asymptotic-ratio
+    + predicted cost), i.e. Eq. 4 with the model's CompressedSize.
+
+    The small ``decoder_rel_err`` that remains is structural, not a bug:
+    Eq. 6 idealizes DecoderSize as AutoencoderSize/2, while a funnel AE's
+    decoder half differs from half by the bias asymmetry (output-width
+    biases vs latent-width biases) plus the 2-scalar normalizer the wire
+    format ships (``autoencoder.decoder_tree``)."""
+    up = float(sum(r.bytes_up for r in records))
+    up_raw = float(sum(r.bytes_up_raw for r in records))
+    dec_bytes = float(sum(getattr(r, "bytes_decoder", 0.0) for r in records))
+    syncs = sum(len(getattr(r, "ae_syncs", None) or []) for r in records)
+    predicted_dec = model.decoder_size * syncs * bytes_per_param
+    predicted_up = up_raw / model.asymptotic_ratio()
+    observed_sr = up_raw / (up + dec_bytes) if up + dec_bytes else float("inf")
+    predicted_sr = (up_raw / (predicted_up + predicted_dec)
+                    if predicted_up + predicted_dec else float("inf"))
+
+    def rel(observed: float, predicted: float) -> float:
+        return abs(observed - predicted) / max(abs(predicted), 1e-12)
+
+    return {
+        "rounds": float(len(records)),
+        "decoder_syncs": float(syncs),
+        "observed_decoder_bytes": dec_bytes,
+        "predicted_decoder_bytes": predicted_dec,
+        "decoder_rel_err": rel(dec_bytes, predicted_dec) if syncs else 0.0,
+        "observed_savings_ratio": observed_sr,
+        "predicted_savings_ratio": predicted_sr,
+        "savings_rel_err": rel(observed_sr, predicted_sr),
+    }

@@ -63,11 +63,23 @@ class ClientState:
     ``residual`` is the error-feedback compressor state (DESIGN.md §6.3);
     ``version`` is the global-model version the client last received;
     ``dispatched`` holds the global params shipped at dispatch time (async
-    only — the client trains against this possibly-stale snapshot)."""
+    only — the client trains against this possibly-stale snapshot).
+
+    The AE-lifecycle fields (DESIGN.md §8.2): ``snapshots`` is the bounded
+    buffer of flat payload vectors the client's AE refits train on;
+    ``last_refresh`` is the round its decoder last shipped (−1 = never, the
+    initial pre-pass decoder is charged on first participation);
+    ``ae_baseline`` is the post-refresh relative reconstruction error the
+    drift trigger compares against. All of it persists through
+    ``checkpoint.save_federated_state`` — residuals and snapshot buffers
+    are run state, not round state."""
 
     residual: Optional[Pytree] = None
     version: int = 0
     dispatched: Optional[Pytree] = None
+    snapshots: List[jax.Array] = dataclasses.field(default_factory=list)
+    last_refresh: int = -1
+    ae_baseline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -125,6 +137,10 @@ def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
 
     comp = run.compressors[ci]
     flat, unravel = ravel_pytree(payload_tree)
+    if run.lifecycle is not None:
+        # snapshot exactly what the codec is about to see (post-EF): the
+        # AE refit distribution is the encode distribution (DESIGN.md §8.2)
+        run.lifecycle.observe(state, comp, flat)
     spec = comp.spec(flat.size)
     params = comp.codec_params()
     payload = codec.encode(spec, params, flat)
@@ -175,6 +191,17 @@ def _server_aggregate(run, encoded: Sequence[EncodedUpdate],
     return apply_update(run.global_params, mean_update, cfg.server_lr)
 
 
+def _lifecycle_sync(run, r: int, participants) -> Tuple[float, Optional[list]]:
+    """Advance the AE lifecycle (DESIGN.md §8) after the round's server
+    aggregate: refresh decisions + warm-start refits for this round's
+    participants. Returns (decoder-sync bytes to charge to ``bytes_down``,
+    synced client ids for the record) — (0.0, None) when no lifecycle is
+    attached, so every scheduler can call it unconditionally."""
+    if run.lifecycle is None:
+        return 0.0, None
+    return run.lifecycle.end_of_round(run, r, participants)
+
+
 def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
                    **extra):
     """Evaluate the (already-updated) global model and build a RoundRecord."""
@@ -207,6 +234,12 @@ class RoundScheduler:
     def run_round(self, r: int):
         raise NotImplementedError
 
+    def on_restore(self) -> None:
+        """Called by ``FederatedRun.load_state`` after the run's clients/
+        params are replaced: rebuild any scheduler state derived from them.
+        Sync schedulers hold none; ``AsyncBuffered`` re-dispatches its
+        event loop (the in-flight heap is not checkpointed)."""
+
 
 class SyncFedAvg(RoundScheduler):
     """The seed behavior: every collaborator trains every round; FedAvg over
@@ -226,12 +259,15 @@ class SyncFedAvg(RoundScheduler):
         run.global_params = _server_aggregate(
             run, encoded, [e.weight for e in encoded])
         n = len(run.datasets)
+        dec_bytes, syncs = _lifecycle_sync(run, r, range(n))
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
-            bytes_down=model_bytes * n, bytes_down_raw=model_bytes * n,
+            bytes_down=model_bytes * n + dec_bytes,
+            bytes_down_raw=model_bytes * n + dec_bytes,
+            bytes_decoder=dec_bytes, ae_syncs=syncs,
             participants=list(range(n)))
 
 
@@ -311,12 +347,15 @@ class SampledSync(RoundScheduler):
         run.global_params = _server_aggregate(
             run, encoded, [e.weight for e in encoded])
         c = len(cohort)
+        dec_bytes, syncs = _lifecycle_sync(run, r, cohort)
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
-            bytes_down=model_bytes * c, bytes_down_raw=model_bytes * c,
+            bytes_down=model_bytes * c + dec_bytes,
+            bytes_down_raw=model_bytes * c + dec_bytes,
+            bytes_decoder=dec_bytes, ae_syncs=syncs,
             participants=cohort)
 
 
@@ -376,6 +415,17 @@ class AsyncBuffered(RoundScheduler):
 
     def bind(self, run) -> None:
         super().bind(run)
+        self._reset()
+
+    def on_restore(self) -> None:
+        # the event heap referenced the pre-restore ClientState objects (and
+        # is deliberately not checkpointed): restart the simulation — every
+        # restored client re-dispatches against the restored global model at
+        # version 0, staleness measured from there
+        self._reset()
+
+    def _reset(self) -> None:
+        run = self.run
         self._heap: List[Tuple[float, int, int]] = []   # (arrival, seq, ci)
         self._seq = 0                                   # FIFO tie-break
         self._version = 0                               # server model version
@@ -430,10 +480,13 @@ class AsyncBuffered(RoundScheduler):
             state = run.clients[ci]        # deferred to the next round so
             state.dispatched = None        # its downlink lands in a record
         self._to_redispatch = list(arrived)
+        dec_bytes, syncs = _lifecycle_sync(run, r, arrived)
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
-            bytes_down=bytes_down, bytes_down_raw=bytes_down,
+            bytes_down=bytes_down + dec_bytes,
+            bytes_down_raw=bytes_down + dec_bytes,
+            bytes_decoder=dec_bytes, ae_syncs=syncs,
             participants=arrived, staleness=stales, sim_time=self._clock)

@@ -1,0 +1,434 @@
+"""AE training lifecycle (DESIGN.md §8): scan-trainer ≡ eager-oracle
+equivalence, cohort-vmap ≡ sequential fits, warm-start semantics, tail-batch
+inclusion, decoder-sync accounting across all three schedulers, Eq. 4–6
+reconciliation, and client-state checkpoint round-trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import MNIST_CLASSIFIER, AEConfig
+from repro.core import (AELifecycle, AsyncBuffered, FCAECompressor, FLConfig,
+                        FederatedRun, LatencyModel, QuantizeCompressor,
+                        SampledSync, SavingsModel, SyncFedAvg,
+                        decoder_sync_bytes, train_autoencoder,
+                        train_autoencoder_cohort, train_autoencoder_eager,
+                        train_autoencoder_scan)
+from repro.core import autoencoder as ae
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+
+AE_CFG = AEConfig(input_dim=128, encoder_hidden=(32,), latent_dim=8)
+
+
+def _weights_data(n, seed=0, dim=128):
+    """Low-rank structured rows — weight-trajectory-like, compressible."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n, 4))
+    basis = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, dim))
+    noise = jax.random.normal(jax.random.PRNGKey(seed + 2), (n, dim))
+    return z @ basis + 0.01 * noise
+
+
+def _tree_close(a, b, **kw):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+# ------------------------------------------------- scan ≡ eager (tentpole)
+@pytest.mark.parametrize("n", [26, 29])   # train 21 (tail of 5) / 24 (÷8)
+def test_scan_trainer_matches_eager_oracle(n):
+    """The lax.scan trainer must reproduce the eager loop — params AND the
+    full history — for both a divisible and a trailing-partial-batch train
+    set. Float tolerance, not bit-for-bit (repo convention: one fused XLA
+    computation reassociates, ~1 ulp per op chain)."""
+    data = _weights_data(n)
+    kw = dict(epochs=30, batch_size=8)
+    pe, he = train_autoencoder_eager(jax.random.PRNGKey(3), AE_CFG, data,
+                                     **kw)
+    ps, hs = train_autoencoder_scan(jax.random.PRNGKey(3), AE_CFG, data,
+                                    **kw)
+    _tree_close(pe, ps, atol=1e-5, rtol=1e-4)
+    assert set(he) == set(hs)
+    for k in he:
+        np.testing.assert_allclose(he[k], hs[k], atol=1e-5, rtol=1e-4)
+
+
+def test_train_autoencoder_dispatches_scan_by_default():
+    data = _weights_data(12)
+    p_default, _ = train_autoencoder(jax.random.PRNGKey(0), AE_CFG, data,
+                                     epochs=5)
+    p_scan, _ = train_autoencoder_scan(jax.random.PRNGKey(0), AE_CFG, data,
+                                       epochs=5)
+    _tree_close(p_default, p_scan, atol=0, rtol=0)
+
+
+def test_eager_trainer_includes_trailing_partial_batch():
+    """Regression (bugfix): with n_train=10, bs=8 the seed loop ran ONE
+    8-row batch per epoch and silently dropped 2 samples; both trainers
+    must now step twice per epoch (the Adam step count is observable via
+    bias correction — compare against a hand-rolled two-batch epoch)."""
+    data = _weights_data(13)              # val 2 → train 11, bs 8 → 8 + 3
+    # one epoch so the batch partition is the only degree of freedom
+    pe, he = train_autoencoder_eager(jax.random.PRNGKey(5), AE_CFG, data,
+                                     epochs=1, batch_size=8)
+    # hand-rolled oracle: same split/shuffle, explicit [0:8] + [8:11]
+    params, train_set, _val, k_shuf, bs = ae._train_setup(
+        jax.random.PRNGKey(5), AE_CFG, data, kind="fc", batch_size=8,
+        val_fraction=0.2, init=None, refit_normalizer=None)
+    assert train_set.shape[0] == 11 and bs == 8
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    _, k = jax.random.split(k_shuf)
+    shuffled = train_set[jax.random.permutation(k, 11)]
+    losses = []
+    for t, sl in ((1, slice(0, 8)), (2, slice(8, 11))):
+        loss, g = jax.value_and_grad(
+            lambda p, x: ae.ae_loss(p, AE_CFG, x, "fc"))(params, shuffled[sl])
+        g = dict(g, norm=jax.tree_util.tree_map(jnp.zeros_like, g["norm"]))
+        params, m, v = ae._adam_update(params, g, m, v, t, 3e-3)
+        losses.append(float(loss))
+    # jitted-vs-unjitted op chains differ at ~1e-5; a dropped tail batch
+    # would differ at the Adam-step scale (~lr = 3e-3), 100x above this
+    _tree_close(pe, params, atol=2e-5, rtol=1e-4)
+    assert he["loss"][0] == pytest.approx(sum(losses) / 2, rel=1e-5)
+
+
+def test_scan_trainer_conv_kind_matches_eager():
+    cfg = ae.ConvAEConfig(channels=(4,), kernel=5, stride=4,
+                          latent_channels=1)
+    data = _weights_data(10, dim=64)
+    kw = dict(kind="conv", epochs=8, batch_size=4)
+    pe, he = train_autoencoder_eager(jax.random.PRNGKey(1), cfg, data, **kw)
+    ps, hs = train_autoencoder_scan(jax.random.PRNGKey(1), cfg, data, **kw)
+    _tree_close(pe, ps, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(he["loss"], hs["loss"], atol=1e-5, rtol=1e-4)
+
+
+# ------------------------------------------------- cohort vmap ≡ sequential
+def test_cohort_vmap_matches_sequential_scan_fits():
+    C = 4
+    rngs = jax.random.split(jax.random.PRNGKey(7), C)
+    datasets = jnp.stack([_weights_data(18, seed=10 * i) for i in range(C)])
+    kw = dict(epochs=20, batch_size=8)
+    stacked, hist = train_autoencoder_cohort(rngs, AE_CFG, datasets, **kw)
+    assert np.asarray(hist["loss"]).shape == (C, 20)
+    for ci in range(C):
+        p1, h1 = train_autoencoder_scan(rngs[ci], AE_CFG, datasets[ci], **kw)
+        got = jax.tree_util.tree_map(lambda x, ci=ci: x[ci], stacked)
+        _tree_close(got, p1, atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(hist["loss"][ci]), h1["loss"],
+                                   atol=1e-5, rtol=1e-4)
+
+
+# ------------------------------------------------- warm-start semantics
+def test_warm_start_keeps_normalizer_and_resets_moments():
+    """init= warms the weights only (DESIGN.md §8.1): normalizer untouched
+    unless refit_normalizer=True, Adam bias correction restarts at t=1
+    (first-step update magnitude ≈ lr, the fresh-moments signature)."""
+    data = _weights_data(20)
+    p0, _ = train_autoencoder_scan(jax.random.PRNGKey(0), AE_CFG, data,
+                                   epochs=10)
+    drifted = data * 3.0
+    # batch_size ≥ n_train ⇒ exactly ONE Adam step in the probe epoch
+    warm, _ = train_autoencoder_scan(jax.random.PRNGKey(1), AE_CFG, drifted,
+                                     epochs=1, batch_size=16, init=p0)
+    assert float(warm["norm"]["std"]) == float(p0["norm"]["std"])
+    assert float(warm["norm"]["mean"]) == float(p0["norm"]["mean"])
+    refit, _ = train_autoencoder_scan(jax.random.PRNGKey(1), AE_CFG, drifted,
+                                      epochs=1, batch_size=16, init=p0,
+                                      refit_normalizer=True)
+    assert float(refit["norm"]["std"]) != float(p0["norm"]["std"])
+    # fresh bias-corrected Adam: the first step is ~lr per coordinate
+    # (m̂/(√v̂+ε) ≈ ±1) and never exceeds it; a stale carried-over t would
+    # leave m̂ un-boosted and the step far below lr
+    delta = np.abs(np.asarray(warm["enc"][0]["w"] - p0["enc"][0]["w"]))
+    assert 0.5 * 3e-3 < np.median(delta[delta > 0]) <= 3e-3 * 1.01
+
+
+def test_warm_start_continues_training_from_init():
+    """The previously-uncovered init= path must actually warm-start: a
+    short refit from trained params beats the same budget from scratch."""
+    data = _weights_data(24)
+    p0, _ = train_autoencoder_scan(jax.random.PRNGKey(0), AE_CFG, data,
+                                   epochs=40)
+    drifted = data * 1.2
+    _, h_warm = train_autoencoder_scan(jax.random.PRNGKey(2), AE_CFG,
+                                       drifted, epochs=5, init=p0)
+    _, h_cold = train_autoencoder_scan(jax.random.PRNGKey(2), AE_CFG,
+                                       drifted, epochs=5)
+    assert h_warm["loss"][-1] < h_cold["loss"][-1]
+
+
+# ------------------------------------------------- lifecycle + accounting
+def _ae_comps(n, ae_cfg):
+    """Untrained per-client AEs — codec quality is irrelevant to the
+    accounting under test, and skipping the pre-pass keeps this fast."""
+    return [FCAECompressor(
+        ae.init_fc_ae(jax.random.PRNGKey(100 + i), ae_cfg), ae_cfg)
+        for i in range(n)]
+
+
+MNIST_AE_SMALL = AEConfig(input_dim=15_910, encoder_hidden=(16,),
+                          latent_dim=8)
+
+
+def _lifecycle_run(scheduler, n_rounds=3, n_clients=4, lifecycle=None):
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, n_clients)
+    comps = _ae_comps(n_clients, MNIST_AE_SMALL)
+    lc = lifecycle if lifecycle is not None else AELifecycle(
+        refresh_every=1, min_snapshots=1, refresh_epochs=2, batch_size=4)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=n_rounds, local_epochs=1, payload="weights"),
+        compressors=comps, eval_data=ev, scheduler=scheduler, lifecycle=lc)
+    return run, run.run()
+
+
+@pytest.mark.parametrize("make_sched", [
+    SyncFedAvg,
+    lambda: SampledSync(cohort=2),
+    lambda: AsyncBuffered(buffer_k=4, latency=LatencyModel()),
+], ids=["sync", "sampled", "async"])
+def test_every_scheduler_charges_decoder_syncs_to_bytes_down(make_sched):
+    """Acceptance: each scheduler's bytes_down must include the decoder
+    bytes of every AE sync (initial ship + refreshes), itemized in
+    bytes_decoder/ae_syncs, with per-sync bytes equal to the shipped
+    decoder tree exactly."""
+    run, hist = _lifecycle_run(make_sched())
+    per_sync = decoder_sync_bytes(run.compressors[0].params)
+    total_syncs = 0
+    for rec in hist:
+        assert rec.ae_syncs is not None
+        assert set(rec.ae_syncs) <= set(rec.participants)
+        assert rec.bytes_decoder == pytest.approx(
+            len(rec.ae_syncs) * per_sync)
+        assert rec.bytes_down == rec.bytes_down_raw
+        # downlink = model broadcast to participants + decoder syncs
+        assert rec.bytes_down >= rec.bytes_decoder
+        if rec.ae_syncs:
+            assert rec.bytes_down > rec.bytes_decoder  # broadcast still there
+        total_syncs += len(rec.ae_syncs)
+    # round 0 ships every participant's initial decoder; refresh_every=1
+    # refits on every later participation
+    assert total_syncs > len(hist[0].participants)
+    assert run.total_bytes()["bytes_decoder"] == pytest.approx(
+        sum(r.bytes_decoder for r in hist))
+
+
+def test_decoder_sync_bytes_reconcile_with_savings_model():
+    """Satellite: observed per-refresh bytes must match Eq. 5/6's
+    DecoderSize (AutoencoderSize/2) up to the documented structural gap
+    (decoder-half bias asymmetry + the 2-scalar normalizer, ≲5%)."""
+    run, hist = _lifecycle_run(SyncFedAvg(), n_rounds=3)
+    model = SavingsModel(
+        original_size=15_910, compressed_size=MNIST_AE_SMALL.latent_dim,
+        autoencoder_size=ae.ae_param_count(run.compressors[0].params),
+        n_decoders=4)
+    report = run.savings_report(model)
+    assert report["decoder_syncs"] == sum(len(r.ae_syncs) for r in hist)
+    per_sync = decoder_sync_bytes(run.compressors[0].params)
+    assert report["observed_decoder_bytes"] == pytest.approx(
+        report["decoder_syncs"] * per_sync)
+    assert report["decoder_rel_err"] < 0.05
+    assert report["savings_rel_err"] < 0.05
+    assert report["observed_savings_ratio"] > 0
+
+
+def test_lifecycle_refresh_updates_compressor_params_and_baseline():
+    run, hist = _lifecycle_run(SyncFedAvg(), n_rounds=2)
+    # refresh_every=1: every client refit in round 1 → params moved
+    assert hist[1].ae_syncs == [0, 1, 2, 3]
+    for ci in range(4):
+        st = run.clients[ci]
+        assert st.last_refresh == 1
+        assert st.ae_baseline is not None and np.isfinite(st.ae_baseline)
+        assert 1 <= len(st.snapshots) <= 8
+
+
+def test_drift_trigger_plumbing():
+    """drift_ratio triggers exactly when the relative reconstruction error
+    exceeds ratio × baseline: a huge ratio never refits, an always-under
+    ratio refits every round once min_snapshots is met."""
+    never = AELifecycle(drift_ratio=1e9, min_snapshots=1, refresh_epochs=2)
+    _, hist = _lifecycle_run(SyncFedAvg(), n_rounds=3, lifecycle=never)
+    assert [r.ae_syncs for r in hist] == [[0, 1, 2, 3], [], []]
+    always = AELifecycle(drift_ratio=0.0, min_snapshots=1, refresh_epochs=2,
+                         batch_size=4)
+    _, hist = _lifecycle_run(SyncFedAvg(), n_rounds=3, lifecycle=always)
+    assert hist[1].ae_syncs == [0, 1, 2, 3]
+    assert hist[2].ae_syncs == [0, 1, 2, 3]
+
+
+def test_lifecycle_refreshes_chunked_ae_on_chunk_rows():
+    """The chunked AE refits its shared funnel on every chunk of every
+    snapshot (DESIGN.md §8.2) — and its decoder syncs are charged the same
+    way as the FC AE's."""
+    from repro.core import ChunkedAECompressor
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
+
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 2)
+    ccfg = ChunkedAEConfig(chunk_size=2048, hidden=(16,), latent_chunk=4)
+    comps = [ChunkedAECompressor(
+        init_chunked_ae(jax.random.PRNGKey(i), ccfg), ccfg, use_kernel=False)
+        for i in range(2)]
+    before = [jax.tree_util.tree_map(jnp.copy, c.params) for c in comps]
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        compressors=comps, eval_data=ev,
+        lifecycle=AELifecycle(refresh_every=1, min_snapshots=1,
+                              refresh_epochs=2, batch_size=4))
+    hist = run.run()
+    assert hist[1].ae_syncs == [0, 1]
+    per_sync = decoder_sync_bytes(comps[0].params)
+    assert hist[1].bytes_decoder == pytest.approx(2 * per_sync)
+    for c, b in zip(comps, before):       # refit actually moved the params
+        assert any(
+            not np.allclose(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree_util.tree_leaves(c.params["dec"]),
+                            jax.tree_util.tree_leaves(b["dec"])))
+
+
+def test_lifecycle_ignores_pointwise_codecs():
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        compressors=[QuantizeCompressor(bits=8) for _ in range(2)],
+        eval_data=ev,
+        lifecycle=AELifecycle(refresh_every=1, min_snapshots=1))
+    hist = run.run()
+    for rec in hist:
+        assert rec.ae_syncs == [] and rec.bytes_decoder == 0.0
+    assert all(c.snapshots == [] for c in run.clients)
+
+
+# ------------------------------------------------- checkpoint round-trips
+def test_client_state_checkpoint_roundtrip(tmp_path):
+    """Satellite (bugfix): save/load must persist per-client ClientState —
+    EF residuals, AE snapshot buffers, and lifecycle scalars."""
+    from repro.checkpoint.checkpoint import (load_federated_state,
+                                             save_federated_state)
+    run, _ = _lifecycle_run(SyncFedAvg(), n_rounds=2)
+    path = os.path.join(tmp_path, "state.npz")
+    save_federated_state(path, 2, run.global_params, clients=run.clients)
+    rnd, gp, meta = load_federated_state(path, run.global_params)
+    assert rnd == 2
+    _tree_close(gp, run.global_params, atol=0, rtol=0)
+    restored = meta["client_states"]
+    assert len(restored) == len(run.clients)
+    for got, want in zip(restored, run.clients):
+        assert got.version == want.version
+        assert got.last_refresh == want.last_refresh
+        assert got.ae_baseline == pytest.approx(want.ae_baseline)
+        assert len(got.snapshots) == len(want.snapshots)
+        for a, b in zip(got.snapshots, want.snapshots):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if want.residual is None:
+            assert got.residual is None
+        else:
+            _tree_close(got.residual, want.residual, atol=0, rtol=0)
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path):
+    """Satellite (bugfix): a 2+2-round run checkpointed in the middle must
+    equal the 4-round run — in particular the error-feedback residuals must
+    survive the round-trip (the seed checkpoint silently reset them)."""
+    train, ev = train_eval_split(mnist_like(0, 384), 128)
+    data = uniform_partition(0, train, 2)
+
+    def mk(n_rounds):
+        return FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=n_rounds, local_epochs=1,
+                     error_feedback=True, payload="update"),
+            compressors=[QuantizeCompressor(bits=4) for _ in range(2)],
+            eval_data=ev)
+
+    full = mk(4)
+    hist_full = full.run()
+    first = mk(2)
+    first.run()
+    assert first.clients[0].residual is not None    # EF state exists to lose
+    path = os.path.join(tmp_path, "resume.npz")
+    first.save_state(path)
+    resumed = mk(2)
+    assert resumed.load_state(path) == 2
+    hist_resumed = resumed.run()
+    _tree_close(full.global_params, resumed.global_params, atol=0, rtol=0)
+    for a, b in zip(hist_full[2:], hist_resumed):
+        assert a.round == b.round
+        assert a.bytes_up == b.bytes_up
+        assert a.global_metrics == b.global_metrics
+
+
+def test_async_scheduler_resumes_without_crashing(tmp_path):
+    """Regression: load_state replaces ``run.clients``, but AsyncBuffered's
+    event heap was dispatched against the ORIGINAL ClientState objects at
+    bind time — without ``on_restore`` the first resumed round trained on
+    ``dispatched=None`` and computed negative staleness (0**-0.5 crash).
+    Async resume restarts the simulation from dispatch (documented)."""
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 4)
+
+    def mk():
+        return FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+            eval_data=ev,
+            scheduler=AsyncBuffered(buffer_k=2, latency=LatencyModel()))
+
+    first = mk()
+    first.run()
+    path = os.path.join(tmp_path, "async.npz")
+    first.save_state(path)
+    resumed = mk()
+    assert resumed.load_state(path) == 2
+    hist = resumed.run()
+    assert [r.round for r in hist] == [2, 3]
+    for rec in hist:
+        assert all(s >= 0 for s in rec.staleness)
+        assert np.isfinite(rec.global_metrics["loss"])
+
+
+def test_resume_restores_refitted_ae_codec_params(tmp_path):
+    """A lifecycle refit MOVES the compressors' AE params; a resume that
+    rebuilt them from the pre-pass would silently revert every decoder
+    (while last_refresh/ae_baseline still described the refit one).
+    save_state/load_state must round-trip the codec params and reproduce
+    the uninterrupted run."""
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 2)
+
+    def mk(n_rounds):
+        return FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=n_rounds, local_epochs=1, payload="weights"),
+            compressors=_ae_comps(2, MNIST_AE_SMALL), eval_data=ev,
+            lifecycle=AELifecycle(refresh_every=1, min_snapshots=1,
+                                  refresh_epochs=2, batch_size=4))
+
+    full = mk(4)
+    hist_full = full.run()
+    first = mk(2)
+    first.run()
+    assert first.clients[0].last_refresh == 1      # a refit happened
+    path = os.path.join(tmp_path, "resume_ae.npz")
+    first.save_state(path)
+    resumed = mk(2)                                 # pre-pass compressors...
+    assert resumed.load_state(path) == 2            # ...restored to refit
+    for got, want in zip(resumed.compressors, first.compressors):
+        _tree_close(got.params, want.params, atol=0, rtol=0)
+    hist_resumed = resumed.run()
+    _tree_close(full.global_params, resumed.global_params, atol=0, rtol=0)
+    for a, b in zip(hist_full[2:], hist_resumed):
+        assert a.round == b.round
+        assert a.ae_syncs == b.ae_syncs
+        assert a.bytes_decoder == b.bytes_decoder
+        assert a.global_metrics == b.global_metrics
