@@ -75,6 +75,8 @@ def load_pytree(path: str, like: Pytree) -> Tuple[Pytree, Optional[dict]]:
 def save_federated_state(path: str, round_idx: int, global_params: Pytree,
                          clients: Optional[list] = None,
                          codec_params: Optional[list] = None,
+                         ratecontrol: Optional[tuple] = None,
+                         scheduler_state: Optional[dict] = None,
                          extra: Optional[dict] = None):
     """Checkpoint a federated run: global params plus (optionally) every
     per-client ``ClientState`` — error-feedback residuals and AE snapshot
@@ -86,18 +88,31 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
     compressors from the pre-pass would silently revert every decoder
     while ``last_refresh``/``ae_baseline`` still described the refit one.
 
+    ``ratecontrol`` is the rate controller's ``(state_meta(),
+    state_tree())`` pair (DESIGN.md §9.3): rung occupancy and cooldowns in
+    JSON, every ladder rung's AE params as arrays — the active rung alone
+    is not enough, a refit on a rung the client later stepped off must
+    survive too. ``scheduler_state`` is ``RoundScheduler.state_dict()``
+    (JSON-able): for ``AsyncBuffered`` the event heap, clock, version and
+    the dispatched-but-unrecorded downlink bytes, paired with the
+    per-client ``dispatched`` model snapshots saved here — dropping those
+    (the pre-§9.3 behavior) silently mis-counted ``bytes_down`` across a
+    save/load cycle.
+
     Array-valued state goes into the npz tree; the structural facts needed
     to rebuild it on load (which clients carry a residual, snapshot buffer
-    shapes, scalar fields) ride in the JSON metadata. The async
-    scheduler's transient ``dispatched`` snapshot is deliberately not
-    persisted — in-flight work restarts from dispatch on resume."""
+    shapes, scalar fields) ride in the JSON metadata."""
     tree: dict = {"global": global_params}
     cmeta = None
     codec_meta = None
+    rc_meta = None
     if codec_params is not None:
         tree["codecs"] = [{"params": p} if p is not None else {}
                           for p in codec_params]
         codec_meta = [p is not None for p in codec_params]
+    if ratecontrol is not None:
+        rc_meta, rc_tree = ratecontrol
+        tree["ratecontrol"] = rc_tree
     if clients is not None:
         ctree, cmeta = [], []
         for st in clients:
@@ -106,9 +121,12 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
                 entry["residual"] = st.residual
             if st.snapshots:
                 entry["snapshots"] = jnp.stack(st.snapshots)
+            if st.dispatched is not None:
+                entry["dispatched"] = st.dispatched
             ctree.append(entry)
             cmeta.append({
                 "has_residual": st.residual is not None,
+                "has_dispatched": st.dispatched is not None,
                 "snap_shape": [len(st.snapshots),
                                *(np.asarray(st.snapshots[0]).shape
                                  if st.snapshots else [])],
@@ -121,7 +139,8 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
         tree["clients"] = ctree
     save_pytree(path, tree,
                 metadata={"round": round_idx, "clients": cmeta,
-                          "codecs": codec_meta, **(extra or {})})
+                          "codecs": codec_meta, "ratecontrol": rc_meta,
+                          "scheduler": scheduler_state, **(extra or {})})
 
 
 def _peek_meta(path: str) -> dict:
@@ -132,16 +151,22 @@ def _peek_meta(path: str) -> dict:
 
 
 def load_federated_state(path: str, like_params: Pytree,
-                         like_codec_params: Optional[list] = None
+                         like_codec_params: Optional[list] = None,
+                         like_ratecontrol: Optional[Pytree] = None
                          ) -> Tuple[int, Pytree, dict]:
     """Restore ``save_federated_state``. Returns (round, global params,
     meta); when client state was saved, ``meta["client_states"]`` holds the
-    rebuilt ``ClientState`` list (residual structure restored against
-    ``like_params`` — a residual is payload-shaped, i.e. model-shaped).
+    rebuilt ``ClientState`` list (residual and async ``dispatched``
+    structures restored against ``like_params`` — both are model-shaped).
     When codec params were saved AND ``like_codec_params`` provides the
     matching structures (the current compressors' ``codec_params()``),
     ``meta["codec_params"]`` holds the restored per-client AE param list
-    (None entries for pointwise codecs)."""
+    (None entries for pointwise codecs). When rate-controller state was
+    saved AND ``like_ratecontrol`` provides the matching ladder tree
+    (``RateController.state_tree()`` of a freshly bound controller),
+    ``meta["ratecontrol_tree"]`` holds the restored ladder params, with
+    the JSON side already in ``meta["ratecontrol"]``. The scheduler's
+    ``state_dict()`` rides through as ``meta["scheduler"]``."""
     meta = _peek_meta(path)
     like: dict = {"global": like_params}
     codec_meta = meta.get("codecs")
@@ -150,6 +175,8 @@ def load_federated_state(path: str, like_params: Pytree,
         like["codecs"] = [
             {"params": lp} if has else {}
             for has, lp in zip(codec_meta, like_codec_params)]
+    if meta.get("ratecontrol") is not None and like_ratecontrol is not None:
+        like["ratecontrol"] = like_ratecontrol
     cmeta = meta.get("clients")
     if cmeta is not None:
         clike = []
@@ -157,6 +184,8 @@ def load_federated_state(path: str, like_params: Pytree,
             entry = {}
             if cm["has_residual"]:
                 entry["residual"] = like_params
+            if cm.get("has_dispatched"):
+                entry["dispatched"] = like_params
             if cm["snap_shape"][0]:
                 entry["snapshots"] = jnp.zeros(
                     tuple(cm["snap_shape"]), dtype=cm["snap_dtype"])
@@ -167,6 +196,8 @@ def load_federated_state(path: str, like_params: Pytree,
     if "codecs" in like:
         meta["codec_params"] = [entry.get("params")
                                 for entry in tree["codecs"]]
+    if "ratecontrol" in like:
+        meta["ratecontrol_tree"] = tree["ratecontrol"]
     if cmeta is not None:
         from repro.core.scheduler import ClientState
         states = []
@@ -175,6 +206,7 @@ def load_federated_state(path: str, like_params: Pytree,
             states.append(ClientState(
                 residual=entry.get("residual"),
                 version=int(cm["version"]),
+                dispatched=entry.get("dispatched"),
                 snapshots=([s for s in snaps] if snaps is not None else []),
                 last_refresh=int(cm["last_refresh"]),
                 ae_baseline=cm["ae_baseline"]))

@@ -21,6 +21,7 @@ from repro.core.codec import (  # noqa: F401
     decode_and_aggregate_sharded,
     decode_batched,
     stack_payloads,
+    wire_bytes,
 )
 from repro.core import codec  # noqa: F401
 from repro.core.autoencoder import (  # noqa: F401
@@ -48,6 +49,13 @@ from repro.core.autoencoder import (  # noqa: F401
     train_autoencoder_scan,
 )
 from repro.core.lifecycle import AELifecycle  # noqa: F401
+from repro.core.ratecontrol import (  # noqa: F401
+    ByteBudget,
+    DistortionTarget,
+    FixedRate,
+    RateController,
+    fc_ae_ladder,
+)
 from repro.core.compressor import (  # noqa: F401
     ChunkedAECompressor,
     ComposedCompressor,

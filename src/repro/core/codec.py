@@ -112,6 +112,27 @@ def ae_spec(spec: CodecSpec) -> Optional[Union[FCAESpec, ChunkedAESpec]]:
     return None
 
 
+def wire_bytes(spec: CodecSpec, params: Optional[Params] = None) -> int:
+    """Static uplink cost of one encoded payload for ``spec``, in bytes.
+
+    Computed by abstract evaluation (``jax.eval_shape``) of :func:`encode`,
+    so nothing runs and no params are read — only their shapes. This is the
+    single pricing rule the rate controllers (DESIGN.md §9.1) plan ladder
+    allocations with, and it is asserted equal to ``tree_bytes`` of a real
+    encode in tests/test_ratecontrol.py, so planned and observed uplink can
+    never diverge."""
+    shapes = jax.eval_shape(
+        lambda f: encode(spec, params, f),
+        jax.ShapeDtypeStruct((spec.size,), jnp.float32))
+    total = 0
+    for s in jax.tree_util.tree_leaves(shapes):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * s.dtype.itemsize
+    return int(total)
+
+
 def latent_shape(spec: Union[FCAESpec, ChunkedAESpec]) -> Tuple[int, ...]:
     """Static shape of the AE latent payload entry ``z``."""
     if isinstance(spec, FCAESpec):

@@ -77,6 +77,12 @@ class RoundRecord:
     participants: Optional[List[int]] = None    # client ids in this round
     staleness: Optional[List[int]] = None       # async only, per participant
     sim_time: float = 0.0              # async only: simulated clock
+    # rate-control plane (DESIGN.md §9): which policy drove this round and
+    # the ladder moves it made — each switch is (client, from_rung,
+    # to_rung), applied after this round's aggregation (effective next
+    # round). None when no controller is attached.
+    controller: Optional[str] = None
+    spec_switches: Optional[List] = None
 
 
 class FederatedRun:
@@ -95,6 +101,7 @@ class FederatedRun:
         eval_data: Optional[Dict[str, jnp.ndarray]] = None,
         scheduler: Optional[RoundScheduler] = None,
         lifecycle: Optional["AELifecycle"] = None,
+        ratecontrol: Optional["RateController"] = None,
     ):
         self.clf_cfg = clf_cfg
         self.datasets = list(datasets)
@@ -111,6 +118,12 @@ class FederatedRun:
         self.history: List[RoundRecord] = []
         self.round_offset = 0              # set by load_state on resume
         self.lifecycle = lifecycle
+        # the rate controller binds BEFORE the scheduler: its ladder
+        # installs each client's initial-rung compressor, which the
+        # scheduler must see from its first dispatch (DESIGN.md §9.1)
+        self.ratecontrol = ratecontrol
+        if ratecontrol is not None:
+            ratecontrol.bind(self)
         self.scheduler = scheduler if scheduler is not None else SyncFedAvg()
         self.scheduler.bind(self)
 
@@ -157,25 +170,54 @@ class FederatedRun:
     def save_state(self, path: str) -> None:
         """Checkpoint the resumable run state: round index, global params,
         every ``ClientState`` (error-feedback residuals, AE snapshot
-        buffers, lifecycle scalars) AND the per-client AE codec params —
-        an ``AELifecycle`` refit moves the compressors, so resuming must
-        not silently revert any decoder to its pre-pass state."""
+        buffers, lifecycle scalars, async dispatch snapshots), the
+        per-client AE codec params — an ``AELifecycle`` refit moves the
+        compressors, so resuming must not silently revert any decoder to
+        its pre-pass state — plus the scheduler's event-loop state and,
+        under a rate controller, every ladder rung's params and the rung
+        occupancy (DESIGN.md §9.3). With a controller attached the codec
+        params ride its ladder tree instead of the flat ``codecs`` section
+        (the active rung differs per client, so a flat section would have
+        no stable structure to restore into)."""
         from repro.checkpoint.checkpoint import save_federated_state
+        rc = self.ratecontrol
         save_federated_state(
             path, self.round_offset + len(self.history), self.global_params,
             clients=self.clients,
-            codec_params=[c.codec_params() for c in self.compressors])
+            codec_params=(None if rc is not None else
+                          [c.codec_params() for c in self.compressors]),
+            ratecontrol=((rc.state_meta(), rc.state_tree())
+                         if rc is not None else None),
+            scheduler_state=self.scheduler.state_dict())
 
     def load_state(self, path: str) -> int:
         """Restore a checkpoint into this (freshly constructed) run;
-        subsequent ``run()`` calls continue from the saved round. Sync
-        schedulers resume exactly; ``AsyncBuffered``'s in-flight event heap
-        is not persisted (its clients restart from dispatch). Returns the
-        next round index."""
+        subsequent ``run()`` calls continue from the saved round. All
+        schedulers resume exactly — ``AsyncBuffered`` restores its event
+        loop (heap, clock, version, pending downlink bytes) from the
+        checkpoint's scheduler state, falling back to a simulation restart
+        only for legacy checkpoints without one. Returns the next round
+        index."""
         from repro.checkpoint.checkpoint import load_federated_state
+        rc = self.ratecontrol
         rnd, params, meta = load_federated_state(
             path, self.global_params,
-            like_codec_params=[c.codec_params() for c in self.compressors])
+            like_codec_params=(None if rc is not None else
+                               [c.codec_params() for c in self.compressors]),
+            like_ratecontrol=(rc.state_tree() if rc is not None else None))
+        # codec params ride the controller's ladder tree when one is
+        # attached and the flat ``codecs`` section otherwise — a presence
+        # mismatch between save and load would silently leave every
+        # compressor at its construction-time params (the exact
+        # silent-decoder-revert save_state exists to prevent), so refuse
+        if (rc is not None) != (meta.get("ratecontrol") is not None):
+            raise ValueError(
+                "rate-controller mismatch: checkpoint was saved "
+                f"{'with' if meta.get('ratecontrol') is not None else 'without'}"
+                " a RateController but this run was constructed "
+                f"{'with' if rc is not None else 'without'} one — codec "
+                "params cannot be restored; rebuild the run to match the "
+                "checkpoint")
         self.global_params = params
         if meta.get("client_states") is not None:
             assert len(meta["client_states"]) == len(self.clients)
@@ -184,9 +226,12 @@ class FederatedRun:
                                   meta.get("codec_params") or []):
             if restored is not None:
                 comp.ae_compressor().params = restored
+        if rc is not None and meta.get("ratecontrol") is not None:
+            rc.load_state(meta["ratecontrol"], meta["ratecontrol_tree"])
         self.history = []
         self.round_offset = rnd
-        self.scheduler.on_restore()        # rebuild client-derived state
+        # rebuild client-derived state / restore the event loop
+        self.scheduler.on_restore(meta.get("scheduler"))
         return rnd
 
 

@@ -54,6 +54,16 @@ def _rel_recon_err(spec: codec.CodecSpec, params: Optional[Pytree],
     return num / den
 
 
+def buffer_snapshot(state, flat: jax.Array, buffer_size: int) -> None:
+    """Append one post-EF flat payload vector to a client's bounded snapshot
+    ring (``ClientState.snapshots``). The one definition shared by the AE
+    lifecycle and the rate controllers (DESIGN.md §9.1) — both must see the
+    codec's true input distribution, and double-buffering the same round
+    would skew refit datasets."""
+    state.snapshots.append(jnp.asarray(flat))
+    del state.snapshots[:-buffer_size]
+
+
 @dataclasses.dataclass
 class AELifecycle:
     """Policy object consumed by all three schedulers (DESIGN.md §8.2).
@@ -84,8 +94,7 @@ class AELifecycle:
         nothing to refit, so only AE-backed clients buffer."""
         if compressor.ae_compressor() is None:
             return
-        state.snapshots.append(jnp.asarray(flat))
-        del state.snapshots[:-self.buffer_size]
+        buffer_snapshot(state, flat, self.buffer_size)
 
     # ------------------------------------------------------------------
     def end_of_round(self, run, r: int, participants: Sequence[int]

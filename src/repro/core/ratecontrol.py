@@ -1,0 +1,391 @@
+"""Adaptive rate control: per-client dynamic codec selection (DESIGN.md §9).
+
+The paper sells the AE scheme as *dynamic* — "the compression ratio ... can
+be modified based on the accuracy requirements, computational capacity, and
+other requirements of the given FL setup" (§4.2) — but a static compressor
+assignment never exercises that knob. Mitchell et al. (2022) show the right
+rate-distortion operating point moves over training, and FedZip (Malekijoo
+et al., 2021) adapts the compression stack per layer; this module makes the
+operating point a first-class *policy*:
+
+* a **ladder** is a per-client list of pre-built compressors ordered
+  cheapest-uplink-first. Every rung's spec is a frozen hashable
+  ``CodecSpec``, so whatever rung a client sits on, the server's fused
+  ``decode_and_aggregate`` call keeps hitting the jit cache (heterogeneous
+  cohorts group by spec before dispatch — DESIGN.md §9.2);
+* a :class:`RateController` decides, at the *end* of each round (mirroring
+  the AE lifecycle: a new codec takes effect the round after the server
+  learns its decoder), which rung each participant occupies next:
+
+  - :class:`FixedRate` — today's behavior, the default: never switches.
+    Trajectory-preserving by construction (params/metrics/bytes_up are
+    untouched; with AE rungs it additionally charges the honest initial
+    decoder ships when no ``AELifecycle`` is attached).
+  - :class:`DistortionTarget` — walk the ladder toward the cheapest rung
+    whose observed post-EF reconstruction error stays under ``target``
+    (step up when over target, step down with hysteresis), measured on the
+    per-client snapshot buffers the AE lifecycle already maintains.
+  - :class:`ByteBudget` — greedy per-round allocation of a global uplink
+    budget across the observed cohort: everyone starts on the cheapest
+    rung and marginal bytes go to the clients whose current-rung
+    reconstruction drift is largest.
+
+* a switch onto an AE rung triggers a refit of that rung's AE on the
+  client's snapshot buffer through the existing ``AELifecycle`` cohort path
+  (same-round same-shape fits share ONE ``train_autoencoder_cohort``
+  dispatch, DESIGN.md §8.1) and **ships the new decoder** — charged to
+  ``RoundRecord.bytes_down``/``bytes_decoder`` exactly like a lifecycle
+  refresh, so ``savings.reconcile`` stays honest under rung churn
+  (DESIGN.md §9.3). Controller decisions ride the record's
+  ``spec_switches``/``controller`` fields, and the whole controller state
+  (rung occupancy, cooldowns, every rung's AE params) survives
+  ``save_federated_state`` for bit-exact resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import AEConfig
+from repro.core import autoencoder as ae
+from repro.core import codec
+from repro.core.compressor import (ComposedCompressor, Compressor,
+                                   FCAECompressor)
+from repro.core.lifecycle import (AELifecycle, _rel_recon_err,
+                                  buffer_snapshot)
+
+Pytree = Any
+Ladder = List[List[Compressor]]          # [client][rung], cheapest first
+
+
+def fc_ae_ladder(n_clients: int, input_dim: int,
+                 latent_dims: Sequence[int] = (8, 32, 128),
+                 hidden: Tuple[int, ...] = (64,),
+                 bits: Optional[int] = None,
+                 seed: int = 0,
+                 params: Optional[Sequence[Sequence[Pytree]]] = None,
+                 ) -> Ladder:
+    """Build the paper-faithful ladder: per-client FC autoencoders at
+    increasing latent widths (cheapest uplink first — ``latent_dims`` must
+    be ascending), optionally composed with ``bits``-wide latent
+    quantization (the §4.2 "orthogonal add-on"). ``params[ci][k]`` supplies
+    pre-trained AE params (e.g. from a pre-pass); omitted rungs start at a
+    fresh per-(client, rung) init and rely on the switch-time refit
+    (DESIGN.md §9.1)."""
+    assert list(latent_dims) == sorted(latent_dims), (
+        "ladder rungs must be ordered cheapest-uplink-first "
+        f"(ascending latent dims), got {latent_dims}")
+    out: Ladder = []
+    for ci in range(n_clients):
+        row: List[Compressor] = []
+        for k, latent in enumerate(latent_dims):
+            cfg = AEConfig(input_dim=input_dim, encoder_hidden=hidden,
+                           latent_dim=latent)
+            if params is not None and params[ci][k] is not None:
+                p = params[ci][k]
+            else:
+                p = ae.init_fc_ae(
+                    jax.random.PRNGKey(
+                        (seed * 1_000_003 + ci * 1009 + k) % 2 ** 31), cfg)
+            comp: Compressor = FCAECompressor(p, cfg)
+            if bits is not None:
+                comp = ComposedCompressor(comp, bits=bits)
+            row.append(comp)
+        out.append(row)
+    return out
+
+
+@dataclasses.dataclass
+class RateController:
+    """Base policy: owns the ladder, the per-client rung occupancy, and the
+    switch→refit→decoder-ship mechanics shared by every policy. Subclasses
+    implement :meth:`plan` only. With ``ladder=None`` the run's existing
+    compressors become a one-rung ladder (nothing can switch — the
+    :class:`FixedRate` degenerate case).
+
+    ``min_snapshots`` gates switching (a refit needs data); ``buffer_size``
+    bounds the snapshot ring this controller maintains for clients the AE
+    lifecycle does not cover (pointwise rungs, or no lifecycle attached).
+    The ``refit_*`` knobs configure the internal :class:`AELifecycle` used
+    for switch-time refits when the run has no lifecycle of its own — with
+    one attached, its hyperparameters win (one refit configuration per
+    run)."""
+
+    ladder: Optional[Ladder] = None
+    initial_rung: int = 0
+    min_snapshots: int = 2
+    buffer_size: int = 8
+    refit_epochs: int = 30
+    refit_batch: int = 8
+    refit_lr: float = 3e-3
+    seed: int = 0
+    name: str = "fixed"
+
+    # ------------------------------------------------------------------
+    def bind(self, run) -> None:
+        """Attach to a ``FederatedRun`` and install the ladder's initial
+        rung as each client's compressor. Called once from the run ctor —
+        a controller carries per-run state, one instance per run."""
+        assert getattr(self, "run", None) is None, (
+            "controller is already bound to a FederatedRun; create a fresh "
+            "controller instance per run")
+        self.run = run
+        n = len(run.datasets)
+        if self.ladder is not None:
+            assert len(self.ladder) == n, (
+                f"ladder has {len(self.ladder)} clients, run has {n}")
+            widths = {len(row) for row in self.ladder}
+            assert len(widths) == 1, "every client needs the same rung count"
+            self._comps = [list(row) for row in self.ladder]
+            assert 0 <= self.initial_rung < len(self._comps[0])
+            for ci in range(n):
+                run.compressors[ci] = self._comps[ci][self.initial_rung]
+        else:
+            self._comps = [[c] for c in run.compressors]
+        self.n_rungs = len(self._comps[0])
+        start = self.initial_rung if self.ladder is not None else 0
+        self._rung = [start] * n
+        self._last_switch = [-(10 ** 9)] * n
+        self._any_ae = any(c.ae_compressor() is not None
+                           for row in self._comps for c in row)
+        self._refitter = AELifecycle(
+            buffer_size=self.buffer_size, min_snapshots=self.min_snapshots,
+            refresh_epochs=self.refit_epochs, batch_size=self.refit_batch,
+            lr=self.refit_lr, seed=self.seed)
+        flat, _ = ravel_pytree(run.global_params)
+        self._n = int(flat.size)
+        # one price list serves every client, so rung k must mean the SAME
+        # spec for all of them (params may differ — specs are the static
+        # shapes/bits the wire cost and the jit cache key on)
+        for ci, row in enumerate(self._comps[1:], start=1):
+            for k, c in enumerate(row):
+                assert c.spec(self._n) == self._comps[0][k].spec(self._n), (
+                    f"client {ci} rung {k} spec differs from client 0's — "
+                    "per-rung specs must agree across the ladder")
+        self._costs = [codec.wire_bytes(self._comps[0][k].spec(self._n),
+                                        self._comps[0][k].codec_params())
+                       for k in range(self.n_rungs)]
+        assert all(a <= b for a, b in zip(self._costs, self._costs[1:])), (
+            "ladder rungs must be ordered cheapest-uplink-first, got wire "
+            f"costs {self._costs}")
+
+    # ------------------------------------------------------------------
+    def rung_of(self, ci: int) -> int:
+        return self._rung[ci]
+
+    def wire_cost(self, rung: int) -> float:
+        """Planned uplink bytes of one payload at ``rung`` (static — from
+        ``codec.wire_bytes``, asserted equal to observed encodes)."""
+        return float(self._costs[rung])
+
+    # ------------------------------------------------------------------
+    def observe(self, run, state, comp, flat: jax.Array) -> None:
+        """Buffer the post-EF flat vector a client just encoded, for the
+        clients the AE lifecycle does not already buffer (pointwise rungs,
+        or no lifecycle attached) — distortion decisions need the codec's
+        true input distribution whatever the current rung is. A ladder
+        that cannot move (one rung) buffers nothing: the vectors would be
+        model-sized dead weight in memory and in every checkpoint."""
+        if self.n_rungs <= 1:
+            return
+        if run.lifecycle is not None and comp.ae_compressor() is not None:
+            return                   # lifecycle buffered this one already
+        buffer_snapshot(state, flat, self.buffer_size)
+
+    # ------------------------------------------------------------------
+    def plan(self, run, r: int, participants: List[int]) -> Dict[int, int]:
+        """Policy hook: proposed rung per client (omit = stay). The base
+        controller is FixedRate — it never proposes a move."""
+        return {}
+
+    # ------------------------------------------------------------------
+    def end_of_round(self, run, r: int, participants: Sequence[int]
+                     ) -> Tuple[float, List[int], List[Tuple[int, int, int]]]:
+        """Advance the controller after round ``r``'s aggregation: apply
+        the policy's planned moves, refit switched-to AE rungs on the
+        snapshot buffers (grouped cohort dispatch), and ship their decoders.
+        Returns ``(decoder_bytes, synced_client_ids, switches)`` where each
+        switch is ``(client, from_rung, to_rung)``. Runs *after* the AE
+        lifecycle's own ``end_of_round`` so this round's decoder traffic
+        (initial ships, cadence/drift refreshes) is charged against the
+        rung that actually served the round (DESIGN.md §9.3)."""
+        bytes_dec, synced = 0.0, []
+        if run.lifecycle is None and self._any_ae:
+            # no user lifecycle: the internal refitter still owes the honest
+            # initial decoder ships of Eq. 5/6 (DESIGN.md §8.3)
+            bytes_dec, synced = self._refitter.end_of_round(
+                run, r, participants)
+        moves = self.plan(run, r, sorted(set(participants)))
+        switches: List[Tuple[int, int, int]] = []
+        refit_todo: List[int] = []
+        for ci in sorted(moves):
+            new = int(moves[ci])
+            old = self._rung[ci]
+            if new == old:
+                continue
+            self._rung[ci] = new
+            run.compressors[ci] = self._comps[ci][new]
+            self._last_switch[ci] = r
+            switches.append((ci, old, new))
+            if run.compressors[ci].ae_compressor() is not None:
+                refit_todo.append(ci)
+            else:
+                run.clients[ci].ae_baseline = None   # stale vs old AE rung
+        lc = run.lifecycle if run.lifecycle is not None else self._refitter
+        fit_now = [ci for ci in refit_todo
+                   if len(run.clients[ci].snapshots) >= self.min_snapshots]
+        refit = dict(lc._refit(run, r, fit_now))
+        for ci in refit_todo:
+            comp = run.compressors[ci].ae_compressor()
+            if ci in refit:
+                comp.params = refit[ci]
+            st = run.clients[ci]
+            st.last_refresh = r
+            st.ae_baseline = lc._baseline(comp, st)
+            # the server cannot decode the new rung without its decoder:
+            # every switch onto an AE rung ships one, refit or not
+            bytes_dec += ae.decoder_sync_bytes(comp.params)
+            synced.append(ci)
+        # multiset: initial ship + switch re-ship in one round = 2 syncs
+        return bytes_dec, sorted(synced), switches
+
+    # ------------------------------------------------------------------
+    def _rung_err(self, run, ci: int, rung: int, flat: jax.Array) -> float:
+        """Observed relative reconstruction error of ``flat`` through the
+        given rung's codec (the lifecycle's scale-free fidelity probe)."""
+        comp = self._comps[ci][rung]
+        spec = comp.spec(flat.shape[0])
+        return float(_rel_recon_err(spec, comp.codec_params(), flat))
+
+    def _eligible(self, run, r: int, participants: List[int], cooldown: int
+                  ) -> List[int]:
+        return [ci for ci in participants
+                if len(run.clients[ci].snapshots) >= self.min_snapshots
+                and r - self._last_switch[ci] >= cooldown]
+
+    # ------------------------------------------------------------------
+    # checkpointing (DESIGN.md §9.3): meta is JSON state, tree is the
+    # array-valued state (every rung's AE params — a refit on a non-active
+    # rung must not be lost when the client has since stepped away)
+    # ------------------------------------------------------------------
+    def state_meta(self) -> Dict[str, Any]:
+        return {"name": self.name, "rung": list(self._rung),
+                "last_switch": list(self._last_switch)}
+
+    def state_tree(self) -> Pytree:
+        return {"codecs": [
+            [({"params": c.codec_params()}
+              if c.codec_params() is not None else {}) for c in row]
+            for row in self._comps]}
+
+    def load_state(self, meta: Dict[str, Any], tree: Pytree) -> None:
+        assert len(meta["rung"]) == len(self._comps)
+        self._rung = [int(x) for x in meta["rung"]]
+        self._last_switch = [int(x) for x in meta["last_switch"]]
+        for ci, row in enumerate(tree["codecs"]):
+            for k, entry in enumerate(row):
+                if entry.get("params") is not None:
+                    self._comps[ci][k].ae_compressor().params = \
+                        entry["params"]
+            self.run.compressors[ci] = self._comps[ci][self._rung[ci]]
+
+
+@dataclasses.dataclass
+class FixedRate(RateController):
+    """Pin every client to ``initial_rung`` forever — today's behavior as
+    an explicit policy, so fixed-rate runs carry the same ``controller``/
+    ``spec_switches`` record fields the adaptive policies do. Trajectory-
+    preserving: params, metrics, and ``bytes_up`` equal a controller-less
+    run exactly (tested); with AE rungs and no lifecycle it adds only the
+    honest initial decoder charges to ``bytes_down``. Never buffers
+    snapshots — a policy that cannot switch has no use for them."""
+
+    def observe(self, run, state, comp, flat: jax.Array) -> None:
+        return
+
+
+@dataclasses.dataclass
+class DistortionTarget(RateController):
+    """Walk the ladder toward the cheapest rung whose observed post-EF
+    reconstruction error stays under ``target``: step one rung up when the
+    current rung's error (on the newest snapshot) exceeds the target, step
+    one rung down when the *cheaper neighbor* already measures under
+    ``margin * target`` (hysteresis, so the controller does not oscillate
+    across the target boundary). Walking — rather than jumping straight to
+    the argmin — matters because an unfit AE rung measures garbage error
+    until its switch-time refit has run; stepping explores one refit at a
+    time (DESIGN.md §9.1). ``cooldown`` is the minimum number of rounds a
+    client stays on a rung between switches."""
+
+    target: float = 0.1
+    margin: float = 0.7
+    cooldown: int = 1
+    name: str = "distortion_target"
+
+    def plan(self, run, r: int, participants: List[int]) -> Dict[int, int]:
+        moves: Dict[int, int] = {}
+        for ci in self._eligible(run, r, participants, self.cooldown):
+            flat = run.clients[ci].snapshots[-1]
+            cur = self._rung[ci]
+            err = self._rung_err(run, ci, cur, flat)
+            if err > self.target and cur + 1 < self.n_rungs:
+                moves[ci] = cur + 1
+            elif (cur > 0 and self._rung_err(run, ci, cur - 1, flat)
+                    <= self.margin * self.target):
+                moves[ci] = cur - 1
+        return moves
+
+
+@dataclasses.dataclass
+class ByteBudget(RateController):
+    """Greedy per-round allocation of a global uplink ``budget`` (bytes per
+    round) across the observed cohort, spending bits where drift is
+    largest: every participant starts at the cheapest rung, then upgrade
+    passes bump clients one rung at a time in descending order of their
+    current-rung reconstruction error until the next upgrade would exceed
+    the budget. High-drift clients therefore end up at most one rung above
+    low-drift ones when the budget runs out mid-pass, and everyone rides
+    the cheapest rung when ``budget`` is below the cohort floor. Planned
+    costs come from ``codec.wire_bytes`` (DESIGN.md §9.1), so the planned
+    round uplink is exactly what the next round's records observe when the
+    cohort repeats; under partial participation it tracks to the extent
+    cohorts overlap (documented in DESIGN.md §9.1)."""
+
+    budget: float = float("inf")
+    cooldown: int = 0
+    name: str = "byte_budget"
+
+    def plan(self, run, r: int, participants: List[int]) -> Dict[int, int]:
+        parts = self._eligible(run, r, participants, self.cooldown)
+        if not parts:
+            return {}
+        # participants this round cannot move (cooldown, thin snapshot
+        # buffer) still encode next round at their current rung: price
+        # them into the budget before allocating upgrades, or the greedy
+        # would systematically over-spend the round
+        fixed_spend = sum(self._costs[self._rung[ci]]
+                          for ci in set(participants) - set(parts))
+        score = {ci: self._rung_err(run, ci, self._rung[ci],
+                                    run.clients[ci].snapshots[-1])
+                 for ci in parts}
+        order = sorted(parts, key=lambda ci: (-score[ci], ci))
+        alloc = {ci: 0 for ci in parts}
+        spent = fixed_spend + self._costs[0] * len(parts)
+        if spent > self.budget:      # budget below the all-cheapest floor
+            return {ci: 0 for ci in parts if self._rung[ci] != 0}
+        changed = True
+        while changed:
+            changed = False
+            for ci in order:
+                nxt = alloc[ci] + 1
+                if nxt >= self.n_rungs:
+                    continue
+                delta = self._costs[nxt] - self._costs[alloc[ci]]
+                if spent + delta <= self.budget:
+                    alloc[ci] = nxt
+                    spent += delta
+                    changed = True
+        return {ci: k for ci, k in alloc.items() if k != self._rung[ci]}

@@ -25,6 +25,19 @@ class SavingsModel:
     autoencoder_size: int       # total AE params (decoder = half)
     n_decoders: int = 1         # 1 = shared decoder (case a); C = per-collab
 
+    def __post_init__(self):
+        # bugfix guard: negative sizes turned Eq. 4's denominator negative
+        # and the break-even bisections below returned meaningless
+        # (negative-ratio-driven) answers — reject them at construction
+        if (self.original_size < 0 or self.compressed_size < 0
+                or self.autoencoder_size < 0 or self.n_decoders < 0):
+            raise ValueError(
+                "SavingsModel sizes/counts must be non-negative, got "
+                f"original={self.original_size} "
+                f"compressed={self.compressed_size} "
+                f"autoencoder={self.autoencoder_size} "
+                f"n_decoders={self.n_decoders}")
+
     @property
     def decoder_size(self) -> float:
         return self.autoencoder_size / 2.0                       # Eq. 6
@@ -34,13 +47,25 @@ class SavingsModel:
         return self.decoder_size * self.n_decoders               # Eq. 5
 
     def savings_ratio(self, comm_rounds: int, collabs: int) -> float:
+        """Eq. 4. A degenerate zero denominator — ``compressed_size == 0``
+        (or zero rounds/collabs) with a zero-cost decoder — reads as free
+        communication: ``inf``, not a ZeroDivisionError."""
         num = self.original_size * comm_rounds * collabs          # Eq. 4
         den = self.compressed_size * comm_rounds * collabs + self.cost
+        if den == 0:
+            return float("inf")
         return num / den
 
     def break_even_collabs(self, comm_rounds: int,
                            max_collabs: int = 10 ** 7) -> Optional[int]:
-        """Smallest collaborator count with SR > 1 (Fig. 10 break-even)."""
+        """Smallest collaborator count with SR > 1 (Fig. 10 break-even).
+        ``None`` is the documented no-break-even sentinel: a scheme whose
+        compression ratio is ≤ 1 never pays for its decoder however many
+        collaborators join (SR is bounded by ``asymptotic_ratio``), so the
+        bisection is skipped rather than probing 10^7 collaborators of a
+        ratio that cannot cross 1."""
+        if self.asymptotic_ratio() <= 1.0:
+            return None
         lo, hi = 1, max_collabs
         if self.savings_ratio(comm_rounds, hi) <= 1.0:
             return None
@@ -54,7 +79,10 @@ class SavingsModel:
 
     def break_even_rounds(self, collabs: int,
                           max_rounds: int = 10 ** 7) -> Optional[int]:
-        """Smallest round count with SR > 1 (Fig. 11 break-even)."""
+        """Smallest round count with SR > 1 (Fig. 11 break-even); ``None``
+        = never breaks even (see :meth:`break_even_collabs`)."""
+        if self.asymptotic_ratio() <= 1.0:
+            return None
         lo, hi = 1, max_rounds
         if self.savings_ratio(hi, collabs) <= 1.0:
             return None
@@ -67,7 +95,10 @@ class SavingsModel:
         return lo
 
     def asymptotic_ratio(self) -> float:
-        """SR as rounds*collabs → ∞ = raw compression ratio."""
+        """SR as rounds*collabs → ∞ = raw compression ratio (``inf`` for a
+        zero-width latent — the degenerate everything-is-free codec)."""
+        if self.compressed_size == 0:
+            return float("inf")
         return self.original_size / self.compressed_size
 
 

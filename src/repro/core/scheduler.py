@@ -48,7 +48,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import codec
 from repro.core.aggregate import (apply_update, normalize_weights,
-                                  staleness_weights, weighted_mean)
+                                  staleness_weights)
 from repro.core.compressor import (codec_stats, ef_compensate, ef_residual,
                                    tree_bytes)
 from repro.core.prepass import evaluate, local_train, local_train_batched
@@ -141,6 +141,12 @@ def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
         # snapshot exactly what the codec is about to see (post-EF): the
         # AE refit distribution is the encode distribution (DESIGN.md §8.2)
         run.lifecycle.observe(state, comp, flat)
+    rc = getattr(run, "ratecontrol", None)
+    if rc is not None:
+        # rate controllers need the same distribution for rung-distortion
+        # decisions, including clients the lifecycle does not buffer
+        # (pointwise rungs / no lifecycle attached) — DESIGN.md §9.1
+        rc.observe(run, state, comp, flat)
     spec = comp.spec(flat.size)
     params = comp.codec_params()
     payload = codec.encode(spec, params, flat)
@@ -153,53 +159,91 @@ def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
                          weight=weight, stats=stats, metrics=metrics)
 
 
+def _fused_group(spec: codec.CodecSpec, encoded: Sequence[EncodedUpdate],
+                 w: jnp.ndarray, base) -> jnp.ndarray:
+    """One fused decode→aggregate dispatch for a same-spec group: stack the
+    payloads (and, when they differ, the per-client AE params) along the
+    client axis and reduce in one jitted call (DESIGN.md §7)."""
+    stacked = codec.stack_payloads([e.payload for e in encoded])
+    if all(e.params is encoded[0].params for e in encoded):
+        params, params_batched = encoded[0].params, False
+    else:
+        params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[e.params for e in encoded])
+        params_batched = True
+    return codec.decode_and_aggregate(spec, params, stacked, w, base,
+                                      params_batched=params_batched)
+
+
 def _server_aggregate(run, encoded: Sequence[EncodedUpdate],
                       weights: Sequence[float]) -> Pytree:
-    """The aggregator's round step: **one** jitted decode→aggregate call
-    over the stacked cohort (DESIGN.md §7), then the server-lr update.
+    """The aggregator's round step: fused decode→aggregate over the stacked
+    cohort (DESIGN.md §7), then the server-lr update.
 
     Homogeneous cohorts (one spec — the common case; per-client AE params
-    are fine and ride a stacked client axis) take the fused path. A cohort
-    mixing *different* codecs falls back to per-client decode +
-    ``weighted_mean``; both reduce with the same einsum so the paths agree
-    to float tolerance (tested in tests/test_codec.py)."""
+    are fine and ride a stacked client axis) take **one** jitted call. A
+    cohort mixing specs — ladder rungs under a rate controller
+    (DESIGN.md §9.2), or genuinely mixed codecs — is *grouped by spec*,
+    one fused call per group. Each group's weights are renormalized to
+    sum 1 (``decode_and_aggregate``'s contract — the kernel-path chunked
+    AE subtracts ``base`` and applies the normalizer mean exactly once on
+    that assumption) and its mean is scaled back by the group's weight
+    mass: ``s_g · (Σ (w_i/s_g)·row_i − base) = Σ w_i·row_i − s_g·base``,
+    so the group contributions sum to the homogeneous reduction to float
+    tolerance (tested against the sequential per-client oracle in
+    tests/test_ratecontrol.py, kernel path included)."""
     cfg = run.cfg
     g_flat, unravel = ravel_pytree(run.global_params)
     base = g_flat if cfg.payload == "weights" else None
-    norm_w = jnp.asarray(normalize_weights(weights), jnp.float32)
+    norm_list = normalize_weights(weights)
+    norm_w = jnp.asarray(norm_list, jnp.float32)
 
     spec0 = encoded[0].spec
     if all(e.spec == spec0 for e in encoded):
-        stacked = codec.stack_payloads([e.payload for e in encoded])
-        if all(e.params is encoded[0].params for e in encoded):
-            params, params_batched = encoded[0].params, False
-        else:
-            params = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *[e.params for e in encoded])
-            params_batched = True
-        mean_flat = codec.decode_and_aggregate(
-            spec0, params, stacked, norm_w, base,
-            params_batched=params_batched)
-        mean_update = unravel(mean_flat)
-    else:                                   # heterogeneous codec cohort
-        rows = [unravel(codec.decode(e.spec, e.params, e.payload))
-                for e in encoded]
-        if base is not None:
-            rows = [jax.tree_util.tree_map(lambda w, g: w - g, r,
-                                           run.global_params) for r in rows]
-        mean_update = weighted_mean(rows, list(weights))
-    return apply_update(run.global_params, mean_update, cfg.server_lr)
+        mean_flat = _fused_group(spec0, encoded, norm_w, base)
+    else:                             # heterogeneous cohort: group by spec
+        groups: Dict[codec.CodecSpec, List[int]] = {}
+        for i, e in enumerate(encoded):
+            groups.setdefault(e.spec, []).append(i)
+        mean_flat = None
+        for spec, idx in groups.items():
+            s_g = sum(norm_list[i] for i in idx)    # host float: bit-stable
+            w_g = jnp.asarray([norm_list[i] / s_g for i in idx],
+                              jnp.float32)
+            part = _fused_group(spec, [encoded[i] for i in idx], w_g, base)
+            contrib = jnp.float32(s_g) * part
+            mean_flat = (contrib if mean_flat is None
+                         else mean_flat + contrib)
+    return apply_update(run.global_params, unravel(mean_flat), cfg.server_lr)
 
 
-def _lifecycle_sync(run, r: int, participants) -> Tuple[float, Optional[list]]:
-    """Advance the AE lifecycle (DESIGN.md §8) after the round's server
-    aggregate: refresh decisions + warm-start refits for this round's
-    participants. Returns (decoder-sync bytes to charge to ``bytes_down``,
-    synced client ids for the record) — (0.0, None) when no lifecycle is
-    attached, so every scheduler can call it unconditionally."""
-    if run.lifecycle is None:
-        return 0.0, None
-    return run.lifecycle.end_of_round(run, r, participants)
+def _lifecycle_sync(run, r: int, participants
+                    ) -> Tuple[float, Optional[list], Optional[list]]:
+    """Advance the AE lifecycle (DESIGN.md §8) and then the rate controller
+    (DESIGN.md §9) after the round's server aggregate. Lifecycle first, on
+    purpose: the decoder that served *this* round's aggregation must be
+    charged before the controller switches a client off it. Returns
+    (decoder-sync bytes to charge to ``bytes_down``, synced client ids,
+    rung switches) — (0.0, None, None) when neither is attached, so every
+    scheduler can call it unconditionally."""
+    dec_bytes, syncs = 0.0, None
+    if run.lifecycle is not None:
+        dec_bytes, syncs = run.lifecycle.end_of_round(run, r, participants)
+    switches = None
+    rc = getattr(run, "ratecontrol", None)
+    if rc is not None:
+        rc_bytes, rc_syncs, switches = rc.end_of_round(run, r, participants)
+        dec_bytes += rc_bytes
+        # multiset union: a client that ships its initial decoder AND a
+        # switch re-ship in the same round counts twice — Eq. 5's
+        # NumDecoders counts ships, not clients (savings.reconcile)
+        syncs = sorted((syncs or []) + rc_syncs)
+    return dec_bytes, syncs, switches
+
+
+def _controller_name(run) -> Optional[str]:
+    rc = getattr(run, "ratecontrol", None)
+    return rc.name if rc is not None else None
 
 
 def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
@@ -234,11 +278,21 @@ class RoundScheduler:
     def run_round(self, r: int):
         raise NotImplementedError
 
-    def on_restore(self) -> None:
+    def state_dict(self) -> Optional[dict]:
+        """JSON-able scheduler state for ``save_federated_state`` (None =
+        stateless). ``AsyncBuffered`` persists its event loop — the clock,
+        version, in-flight heap, and the dispatched-but-unrecorded downlink
+        bytes — so a resumed run's byte accounting matches an uninterrupted
+        one (DESIGN.md §9.3)."""
+        return None
+
+    def on_restore(self, state: Optional[dict] = None) -> None:
         """Called by ``FederatedRun.load_state`` after the run's clients/
         params are replaced: rebuild any scheduler state derived from them.
-        Sync schedulers hold none; ``AsyncBuffered`` re-dispatches its
-        event loop (the in-flight heap is not checkpointed)."""
+        ``state`` is what :meth:`state_dict` returned at save time (None
+        for stateless schedulers or pre-§9.3 checkpoints). Sync schedulers
+        hold none; ``AsyncBuffered`` restores its event loop from ``state``
+        and falls back to re-dispatching everything when it is absent."""
 
 
 class SyncFedAvg(RoundScheduler):
@@ -259,7 +313,7 @@ class SyncFedAvg(RoundScheduler):
         run.global_params = _server_aggregate(
             run, encoded, [e.weight for e in encoded])
         n = len(run.datasets)
-        dec_bytes, syncs = _lifecycle_sync(run, r, range(n))
+        dec_bytes, syncs, switches = _lifecycle_sync(run, r, range(n))
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
@@ -268,6 +322,7 @@ class SyncFedAvg(RoundScheduler):
             bytes_down=model_bytes * n + dec_bytes,
             bytes_down_raw=model_bytes * n + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,
+            spec_switches=switches, controller=_controller_name(run),
             participants=list(range(n)))
 
 
@@ -347,7 +402,7 @@ class SampledSync(RoundScheduler):
         run.global_params = _server_aggregate(
             run, encoded, [e.weight for e in encoded])
         c = len(cohort)
-        dec_bytes, syncs = _lifecycle_sync(run, r, cohort)
+        dec_bytes, syncs, switches = _lifecycle_sync(run, r, cohort)
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
@@ -356,6 +411,7 @@ class SampledSync(RoundScheduler):
             bytes_down=model_bytes * c + dec_bytes,
             bytes_down_raw=model_bytes * c + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,
+            spec_switches=switches, controller=_controller_name(run),
             participants=cohort)
 
 
@@ -372,6 +428,15 @@ class LatencyModel:
     straggler_frac: float = 0.0        # first ceil(frac*N) clients are slow
     straggler_mult: float = 10.0
     seed: int = 0
+    # bugfix compat escape hatch: the pre-§9.3 ad-hoc hash
+    # ``(seed*7919 + client*104729 + dispatch) mod 2^31`` collides across
+    # (client, dispatch) pairs at large N (104729 ≡ a small residue walk
+    # mod 2^31 — distinct pairs land on identical RandomState streams), so
+    # distinct dispatches silently drew IDENTICAL jitter. The default path
+    # derives the stream from ``np.random.SeedSequence([seed, client,
+    # dispatch])``, which is collision-resistant by construction; set
+    # ``legacy_hash=True`` only to reproduce old simulated traces.
+    legacy_hash: bool = False
 
     def is_straggler(self, client: int, n_clients: int) -> bool:
         return client < int(np.ceil(self.straggler_frac * n_clients))
@@ -379,9 +444,14 @@ class LatencyModel:
     def sample(self, client: int, dispatch: int, n_clients: int) -> float:
         lat = self.base
         if self.jitter > 0.0:
-            rng = np.random.RandomState(
-                (self.seed * 7919 + client * 104729 + dispatch) % 2 ** 31)
-            lat *= 1.0 + self.jitter * (2.0 * rng.rand() - 1.0)
+            if self.legacy_hash:
+                rng = np.random.RandomState(
+                    (self.seed * 7919 + client * 104729 + dispatch) % 2 ** 31)
+                u = rng.rand()
+            else:
+                u = np.random.default_rng(np.random.SeedSequence(
+                    [self.seed, client, dispatch])).random()
+            lat *= 1.0 + self.jitter * (2.0 * u - 1.0)
         if self.is_straggler(client, n_clients):
             lat *= self.straggler_mult
         return float(lat)
@@ -417,12 +487,37 @@ class AsyncBuffered(RoundScheduler):
         super().bind(run)
         self._reset()
 
-    def on_restore(self) -> None:
-        # the event heap referenced the pre-restore ClientState objects (and
-        # is deliberately not checkpointed): restart the simulation — every
-        # restored client re-dispatches against the restored global model at
-        # version 0, staleness measured from there
-        self._reset()
+    def state_dict(self) -> dict:
+        """The whole event loop, JSON-able: heap entries reference clients
+        by index and the per-client ``dispatched`` model snapshots ride the
+        checkpoint's client tree, so a resumed run continues the simulation
+        exactly — same arrivals, same staleness, and (the §9.3 bugfix) the
+        same downlink byte totals as an uninterrupted run. Before this,
+        ``on_restore`` zeroed ``_pending_down`` and re-dispatched everyone,
+        so dispatched-but-unrecorded broadcast bytes were dropped and the
+        restart re-charged a full-federation broadcast the uninterrupted
+        run never shipped."""
+        return {"heap": [[float(t), int(s), int(ci)]
+                         for t, s, ci in self._heap],
+                "seq": self._seq, "version": self._version,
+                "clock": self._clock, "pending_down": self._pending_down,
+                "to_redispatch": list(self._to_redispatch)}
+
+    def on_restore(self, state: Optional[dict] = None) -> None:
+        if state is None:
+            # legacy checkpoint without scheduler state: restart the
+            # simulation — every restored client re-dispatches against the
+            # restored global model at version 0 (re-broadcast charged)
+            self._reset()
+            return
+        self._heap = [(float(t), int(s), int(ci))
+                      for t, s, ci in state["heap"]]
+        heapq.heapify(self._heap)
+        self._seq = int(state["seq"])
+        self._version = int(state["version"])
+        self._clock = float(state["clock"])
+        self._pending_down = float(state["pending_down"])
+        self._to_redispatch = [int(ci) for ci in state["to_redispatch"]]
 
     def _reset(self) -> None:
         run = self.run
@@ -480,7 +575,7 @@ class AsyncBuffered(RoundScheduler):
             state = run.clients[ci]        # deferred to the next round so
             state.dispatched = None        # its downlink lands in a record
         self._to_redispatch = list(arrived)
-        dec_bytes, syncs = _lifecycle_sync(run, r, arrived)
+        dec_bytes, syncs, switches = _lifecycle_sync(run, r, arrived)
         return _finish_record(
             run, r, [e.metrics for e in encoded],
             sum(e.stats["compressed_bytes"] for e in encoded),
@@ -489,4 +584,5 @@ class AsyncBuffered(RoundScheduler):
             bytes_down=bytes_down + dec_bytes,
             bytes_down_raw=bytes_down + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,
+            spec_switches=switches, controller=_controller_name(run),
             participants=arrived, staleness=stales, sim_time=self._clock)

@@ -85,9 +85,19 @@ def train_eval_split(data: Dict[str, jnp.ndarray], n_eval: int
 
 
 def dirichlet_partition(seed: int, data: Dict[str, jnp.ndarray],
-                        n_clients: int, alpha: float = 0.5
+                        n_clients: int, alpha: float = 0.5,
+                        min_per_client: int = 1
                         ) -> List[Dict[str, jnp.ndarray]]:
-    """Label-skew non-IID partition (standard FL benchmark protocol)."""
+    """Label-skew non-IID partition (standard FL benchmark protocol).
+
+    At small ``alpha`` a draw can leave a client with almost no samples,
+    which degenerates anything trained on the shard (a one-sample client
+    still gets a FedAvg weight and a rate-control drift signal);
+    ``min_per_client`` tops such shards up deterministically — index
+    ``(ci + k) % n`` for the k-th filler, so the default (1) reproduces the
+    previous give-empty-clients-one-sample behavior bit-for-bit. Fillers
+    may duplicate samples already owned by other clients (documented
+    overlap, negligible at benchmark sizes)."""
     rng = np.random.RandomState(seed)
     y = np.asarray(data["y"])
     n_classes = int(y.max()) + 1
@@ -102,8 +112,10 @@ def dirichlet_partition(seed: int, data: Dict[str, jnp.ndarray],
     out = []
     for ci in range(n_clients):
         sel = np.array(sorted(client_idx[ci]), dtype=np.int64)
-        if len(sel) == 0:            # give empty clients one sample
-            sel = np.array([ci % len(y)])
+        if len(sel) < min_per_client:
+            extra = [(ci + k) % len(y)
+                     for k in range(min_per_client - len(sel))]
+            sel = np.concatenate([sel, np.array(extra, dtype=np.int64)])
         out.append({"x": data["x"][sel], "y": data["y"][sel]})
     return out
 

@@ -100,6 +100,47 @@ def test_savings_ratio_large_scale_trend():
         < sm.savings_ratio(40, 1000)
 
 
+def test_savings_degenerate_inputs_are_guarded():
+    """Satellite (bugfix): compression ratio ≤ 1, zero-width latents, and
+    zero-cost decoders used to divide by zero or drive the break-even
+    bisections off a meaningless ratio; negative sizes are rejected at
+    construction. The documented sentinels: ``inf`` savings ratio for a
+    zero denominator, ``None`` for never-breaks-even."""
+    # ratio ≤ 1: never breaks even, regardless of decoder cost
+    at_parity = SavingsModel(original_size=100, compressed_size=100,
+                             autoencoder_size=0)
+    worse = SavingsModel(original_size=100, compressed_size=200,
+                         autoencoder_size=1000)
+    for sm in (at_parity, worse):
+        assert sm.break_even_collabs(comm_rounds=40) is None
+        assert sm.break_even_rounds(collabs=40) is None
+    assert at_parity.savings_ratio(40, 40) == 1.0     # no ZeroDivision
+
+    # zero-cost decoder with a real ratio: breaks even immediately
+    free = SavingsModel(original_size=100, compressed_size=10,
+                        autoencoder_size=0)
+    assert free.break_even_collabs(comm_rounds=1) == 1
+    assert free.break_even_rounds(collabs=1) == 1
+    assert free.savings_ratio(1, 1) == 10.0
+
+    # zero-width latent + zero cost: the everything-is-free degenerate —
+    # previously a ZeroDivisionError
+    degenerate = SavingsModel(original_size=100, compressed_size=0,
+                              autoencoder_size=0)
+    assert degenerate.savings_ratio(10, 10) == float("inf")
+    assert degenerate.asymptotic_ratio() == float("inf")
+    assert degenerate.break_even_collabs(comm_rounds=1) == 1
+
+    # negative sizes: rejected (previously produced negative break-evens
+    # via a negative Eq.-4 denominator)
+    with pytest.raises(ValueError):
+        SavingsModel(original_size=100, compressed_size=-10,
+                     autoencoder_size=1000)
+    with pytest.raises(ValueError):
+        SavingsModel(original_size=-1, compressed_size=10,
+                     autoencoder_size=1000)
+
+
 @hypothesis.given(st.integers(1, 500), st.integers(1, 500))
 def test_property_savings_monotonic(rounds, collabs):
     sm = SavingsModel(original_size=10_000, compressed_size=10,

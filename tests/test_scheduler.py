@@ -180,6 +180,85 @@ def test_async_stragglers_report_staleness():
     assert np.isfinite(hist[-1].global_metrics["loss"])
 
 
+def test_latency_model_draws_are_distinct_across_pairs():
+    """Satellite (bugfix): the old ad-hoc hash ``(seed*7919 + c*104729 + d)
+    mod 2^31`` collided across (client, dispatch) pairs at large N, so
+    distinct dispatches silently drew identical jitter. The SeedSequence
+    path must give a distinct draw per pair."""
+    lm = LatencyModel(jitter=0.5, seed=0)
+    draws = {lm.sample(c, d, 10 ** 6)
+             for c in range(500) for d in range(4)}
+    assert len(draws) == 500 * 4
+
+    # the legacy hash, by contrast, demonstrably collides: 104729 is odd,
+    # so k = 104729^(-1) mod 2^31 exists and (client + k, dispatch) lands
+    # on exactly (client, dispatch + 1)'s stream — distinct pairs, one
+    # RandomState, identical draws
+    legacy = LatencyModel(jitter=0.5, seed=0, legacy_hash=True)
+    k = pow(104729, -1, 2 ** 31)
+    for c, d in ((0, 0), (123, 2)):
+        assert legacy.sample(c + k, d, 10 ** 6) == \
+            legacy.sample(c, d + 1, 10 ** 6)
+    # ...while the SeedSequence path separates those same pairs
+    assert lm.sample(0 + k, 0, 10 ** 6) != lm.sample(0, 1, 10 ** 6)
+
+
+def test_latency_model_legacy_flag_reproduces_old_draws():
+    """The compat flag must reproduce the pre-fix stream bit-for-bit (for
+    pinned simulated traces)."""
+    lm = LatencyModel(base=2.0, jitter=0.25, seed=3, legacy_hash=True)
+    for c, d in ((0, 0), (5, 2), (17, 1)):
+        rng = np.random.RandomState((3 * 7919 + c * 104729 + d) % 2 ** 31)
+        want = 2.0 * (1.0 + 0.25 * (2.0 * rng.rand() - 1.0))
+        assert lm.sample(c, d, 32) == want
+
+
+def test_async_byte_accounting_survives_save_load(tmp_path):
+    """Satellite (bugfix): a mid-run save/load used to (a) drop the
+    dispatched-but-unrecorded ``_pending_down`` bytes and (b) re-dispatch
+    the whole federation, re-charging a broadcast the uninterrupted run
+    never shipped. With the event loop persisted (DESIGN.md §9.3), the
+    resumed run's byte totals AND trajectory equal the uninterrupted
+    run's."""
+    from repro.data.pipeline import uniform_partition
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 6)
+
+    def mk(n_rounds):
+        return FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update"),
+            eval_data=ev,
+            scheduler=AsyncBuffered(
+                buffer_k=2, latency=LatencyModel(jitter=0.4)))
+
+    full = mk(4)
+    hist_full = full.run()
+    first = mk(2)
+    hist_first = first.run()
+    path = f"{tmp_path}/async_bytes.npz"
+    first.save_state(path)
+    resumed = mk(2)
+    assert resumed.load_state(path) == 2
+    hist_resumed = resumed.run()
+
+    spliced = hist_first + hist_resumed
+    assert len(spliced) == len(hist_full)
+    for a, b in zip(hist_full, spliced):
+        assert a.round == b.round
+        assert a.bytes_down == b.bytes_down
+        assert a.bytes_up == b.bytes_up
+        assert a.participants == b.participants
+        assert a.staleness == b.staleness
+        assert a.global_metrics == b.global_metrics
+    assert sum(r.bytes_down for r in hist_full) == \
+        sum(r.bytes_down for r in spliced)
+    np.testing.assert_allclose(
+        np.asarray(jax.flatten_util.ravel_pytree(full.global_params)[0]),
+        np.asarray(jax.flatten_util.ravel_pytree(resumed.global_params)[0]),
+        atol=0, rtol=0)
+
+
 def test_error_feedback_residual_survives_unsampled_rounds():
     """A client's EF residual is scheduler state, not round state: it must
     persist untouched across rounds where the client is not sampled."""
