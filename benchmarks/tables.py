@@ -625,6 +625,82 @@ def table_roofline_summary() -> List[Row]:
     return rows
 
 
+# =====================================================================
+# per-layer codec partitions (DESIGN.md §10) — flat vs partitioned server
+# decode→aggregate, homogeneous and mixed-rung cohorts
+# =====================================================================
+def table_fl_partition() -> List[Row]:
+    """The §10.2 grouped fused server path measured against the flat
+    single-spec path on the same cohort: ``flat`` is one
+    ``decode_and_aggregate`` over the whole update; ``part2`` is the same
+    cohort under a 2-group partition (bulk + head, both q8 — one fused
+    call per group inlined into one jitted dispatch); ``part2_mixed`` is a
+    heterogeneous cohort (half the clients on q8, half on q4 for the bulk
+    group) through ``partition.server_decode_aggregate`` — one fused call
+    per (partition, spec) bucket. Partitioning costs the extra per-group
+    dispatches + the scatter epilogue; this table keeps that overhead
+    honest next to ``fl_decode_agg``."""
+    from repro.core import codec, normalize_weights, partition
+    from repro.core.scheduler import EncodedUpdate
+
+    model = (1 << 20) if FULL else (1 << 15)
+    head = model // 16
+    pmap = partition.PartitionMap(groups=(
+        ("bulk", ((0, model - head),)), ("head", ((model - head, head),))))
+    rows: List[Row] = []
+    flat_spec = codec.QuantizeSpec(size=model)
+    part_spec = partition.make_partition_spec(pmap, {
+        "bulk": codec.QuantizeSpec(size=model - head),
+        "head": codec.QuantizeSpec(size=head)})
+    spec_q4_bulk = partition.make_partition_spec(pmap, {
+        "bulk": codec.QuantizeSpec(size=model - head, bits=4),
+        "head": codec.QuantizeSpec(size=head)})
+    for cohort in (8, 64):
+        flats = [jax.random.normal(jax.random.PRNGKey(i), (model,))
+                 for i in range(cohort)]
+        weights = normalize_weights([float(i + 1) for i in range(cohort)])
+        nw = jnp.asarray(weights, jnp.float32)
+        flat_stacked = codec.stack_payloads(
+            [codec.encode(flat_spec, None, f) for f in flats])
+        part_stacked = codec.stack_payloads(
+            [codec.encode(part_spec, None, f) for f in flats])
+        mixed = [
+            EncodedUpdate(
+                payload=codec.encode(
+                    part_spec if i % 2 else spec_q4_bulk, None, f),
+                spec=(part_spec if i % 2 else spec_q4_bulk), params=None,
+                weight=weights[i], stats={}, metrics={})
+            for i, f in enumerate(flats)]
+
+        def flat_path():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate(flat_spec, None, flat_stacked,
+                                           nw))
+
+        def part_path():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate(part_spec, None, part_stacked,
+                                           nw))
+
+        def part_mixed():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(mixed, weights, None))
+
+        t_flat = _timeit_min(flat_path)
+        t_part = _timeit_min(part_path)
+        t_mix = _timeit_min(part_mixed)
+        rows += [
+            (f"decode_agg_flat_c{cohort}", t_flat, "single spec"),
+            (f"decode_agg_part2_c{cohort}", t_part,
+             f"overhead={t_part / max(t_flat, 1e-9):.2f}x vs flat "
+             "(2 groups, 1 jitted call)"),
+            (f"decode_agg_part2_mixed_c{cohort}", t_mix,
+             f"overhead={t_mix / max(t_flat, 1e-9):.2f}x vs flat "
+             "(3 (partition, spec) buckets)"),
+        ]
+    return rows
+
+
 ALL_TABLES = [
     ("mnist_ae", table_mnist_ae),
     ("cifar_ae", table_cifar_ae),
@@ -638,5 +714,6 @@ ALL_TABLES = [
     ("fl_decode_agg", table_fl_decode_agg),
     ("ae_train", table_ae_train),
     ("fl_rate_control", table_fl_rate_control),
+    ("fl_partition", table_fl_partition),
     ("roofline_summary", table_roofline_summary),
 ]

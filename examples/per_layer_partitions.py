@@ -1,0 +1,86 @@
+"""Per-layer codec partitions demo (DESIGN.md §10): one codec per model
+layer, grouped fused aggregation, per-partition decoder accounting.
+
+A 3-client federation on the paper's MNIST MLP, partitioned by layer:
+``dense0`` (15,700 params — the bulk) rides a per-client FC autoencoder,
+``dense1`` (the 210-param head, where reconstruction error hurts logits
+directly) rides int8 quantization. The run shows:
+
+1. the per-partition wire price list (``wire_bytes_by_group``) and the
+   mixed compression ratio on the wire,
+2. the AE lifecycle shipping/refreshing ONLY the AE-backed group's decoder
+   (``ae_syncs`` entries are ``(client, group)`` lanes),
+3. ``savings.reconcile`` with a ``{group: SavingsModel}`` mapping — the
+   Eq. 5 Cost term summed per partition's own decoder ships.
+
+The per-client AEs start at a random init (no pre-pass, to keep the demo
+fast), so early rounds sit near chance until the cadence refit at round 3
+fits the decoders to the real weights distribution — accuracy then jumps
+to ~0.96, the §8 lifecycle story in miniature.
+
+Run: PYTHONPATH=src python examples/per_layer_partitions.py
+"""
+import jax
+
+from repro.configs.paper import MNIST_CLASSIFIER, AEConfig
+from repro.core import (AELifecycle, FCAECompressor, FLConfig, FederatedRun,
+                        PartitionedCompressor, QuantizeCompressor,
+                        SavingsModel, by_layer_partition,
+                        wire_bytes_by_group)
+from repro.core import autoencoder as ae
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+from repro.models.classifiers import init_classifier
+
+N_CLIENTS = 3
+
+
+def main():
+    template = init_classifier(jax.random.PRNGKey(0), MNIST_CLASSIFIER)
+    pmap = by_layer_partition(template)
+    d0 = pmap.group_size("dense0")
+    ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(64,), latent_dim=32)
+    print(f"partition groups: { {n: pmap.group_size(n) for n in pmap.names} }")
+
+    train, ev = train_eval_split(mnist_like(0, 768), 256)
+    data = uniform_partition(0, train, N_CLIENTS)
+    comps = [PartitionedCompressor(pmap, {
+        "dense0": FCAECompressor(
+            ae.init_fc_ae(jax.random.PRNGKey(10 + ci), ae_cfg), ae_cfg),
+        "dense1": QuantizeCompressor(bits=8),
+    }) for ci in range(N_CLIENTS)]
+    prices = wire_bytes_by_group(comps[0].spec(pmap.size),
+                                 comps[0].codec_params())
+    print(f"per-partition uplink bytes: {prices} "
+          f"(raw: { {n: 4 * pmap.group_size(n) for n in pmap.names} })")
+
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=6, local_epochs=2, payload="weights"),
+        compressors=comps, eval_data=ev,
+        lifecycle=AELifecycle(refresh_every=3, min_snapshots=2,
+                              refresh_epochs=150, batch_size=4))
+    hist = run.run()
+    for r in hist:
+        print(f"round {r.round}: acc={r.global_metrics['accuracy']:.3f} "
+              f"up={r.bytes_up / 1e3:.1f}kB (x{r.compression_ratio:.0f}) "
+              f"decoder={r.bytes_decoder / 1e6:.2f}MB syncs={r.ae_syncs}")
+
+    models = {
+        "dense0": SavingsModel(
+            original_size=d0, compressed_size=ae_cfg.latent_dim,
+            autoencoder_size=ae_cfg.n_params, n_decoders=N_CLIENTS),
+        "dense1": SavingsModel(
+            original_size=pmap.group_size("dense1"),
+            compressed_size=pmap.group_size("dense1") // 4,  # int8 + scales
+            autoencoder_size=0, n_decoders=0),
+    }
+    report = run.savings_report(models)
+    print("Eq. 4-6 reconciliation (per-partition decoder ships):")
+    for k, v in report.items():
+        print(f"  {k}: {v:.4g}")
+    assert report["decoder_rel_err"] < 0.01, "structural gap bound blown"
+
+
+if __name__ == "__main__":
+    main()

@@ -123,6 +123,15 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
                 entry["snapshots"] = jnp.stack(st.snapshots)
             if st.dispatched is not None:
                 entry["dispatched"] = st.dispatched
+            # per-partition lifecycle state (DESIGN.md §10.4): one snapshot
+            # ring / refresh round / drift baseline per partition group
+            part_snaps = {name: snaps for name, snaps
+                          in getattr(st, "part_snapshots", {}).items()
+                          if snaps}
+            if part_snaps:
+                entry["part_snapshots"] = {
+                    name: jnp.stack(snaps)
+                    for name, snaps in part_snaps.items()}
             ctree.append(entry)
             cmeta.append({
                 "has_residual": st.residual is not None,
@@ -135,6 +144,16 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
                 "version": st.version,
                 "last_refresh": st.last_refresh,
                 "ae_baseline": st.ae_baseline,
+                "part_snap_shapes": {
+                    name: [len(snaps),
+                           *np.asarray(snaps[0]).shape]
+                    for name, snaps in part_snaps.items()},
+                "part_snap_dtypes": {
+                    name: str(np.asarray(snaps[0]).dtype)
+                    for name, snaps in part_snaps.items()},
+                "part_last_refresh":
+                    dict(getattr(st, "part_last_refresh", {})),
+                "part_baseline": dict(getattr(st, "part_baseline", {})),
             })
         tree["clients"] = ctree
     save_pytree(path, tree,
@@ -189,6 +208,11 @@ def load_federated_state(path: str, like_params: Pytree,
             if cm["snap_shape"][0]:
                 entry["snapshots"] = jnp.zeros(
                     tuple(cm["snap_shape"]), dtype=cm["snap_dtype"])
+            if cm.get("part_snap_shapes"):
+                entry["part_snapshots"] = {
+                    name: jnp.zeros(tuple(shape),
+                                    dtype=cm["part_snap_dtypes"][name])
+                    for name, shape in cm["part_snap_shapes"].items()}
             clike.append(entry)
         like["clients"] = clike
     tree, meta = load_pytree(path, like)
@@ -203,12 +227,19 @@ def load_federated_state(path: str, like_params: Pytree,
         states = []
         for cm, entry in zip(cmeta, tree["clients"]):
             snaps = entry.get("snapshots")
+            psnaps = entry.get("part_snapshots") or {}
             states.append(ClientState(
                 residual=entry.get("residual"),
                 version=int(cm["version"]),
                 dispatched=entry.get("dispatched"),
                 snapshots=([s for s in snaps] if snaps is not None else []),
                 last_refresh=int(cm["last_refresh"]),
-                ae_baseline=cm["ae_baseline"]))
+                ae_baseline=cm["ae_baseline"],
+                part_snapshots={name: [s for s in stackd]
+                                for name, stackd in psnaps.items()},
+                part_last_refresh={
+                    name: int(v) for name, v
+                    in (cm.get("part_last_refresh") or {}).items()},
+                part_baseline=dict(cm.get("part_baseline") or {})))
         meta["client_states"] = states
     return int(meta["round"]), tree["global"], meta

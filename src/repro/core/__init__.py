@@ -24,6 +24,16 @@ from repro.core.codec import (  # noqa: F401
     wire_bytes,
 )
 from repro.core import codec  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    PartitionMap,
+    PartitionSpec,
+    by_layer_partition,
+    by_leaf_partition,
+    identity_partition,
+    make_partition_spec,
+    wire_bytes_by_group,
+)
+from repro.core import partition  # noqa: F401
 from repro.core.autoencoder import (  # noqa: F401
     ChunkedAEConfig,
     ConvAEConfig,
@@ -55,6 +65,7 @@ from repro.core.ratecontrol import (  # noqa: F401
     FixedRate,
     RateController,
     fc_ae_ladder,
+    partition_ladder,
 )
 from repro.core.compressor import (  # noqa: F401
     ChunkedAECompressor,
@@ -62,10 +73,12 @@ from repro.core.compressor import (  # noqa: F401
     Compressor,
     FCAECompressor,
     IdentityCompressor,
+    PartitionedCompressor,
     QuantizeCompressor,
     TopKCompressor,
     ef_compensate,
     ef_residual,
+    partitioned,
     tree_bytes,
 )
 from repro.core.federated import (  # noqa: F401

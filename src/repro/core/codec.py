@@ -97,8 +97,24 @@ class ComposedSpec:
         return self.inner.size
 
 
+# ``partition.PartitionSpec`` (one frozen sub-spec per named leaf group,
+# DESIGN.md §10) is the seventh member of this union: every entry point
+# below dispatches it to the pure per-group functions in core/partition.py
+# (imported lazily — partition.py imports this module at top level).
 CodecSpec = Union[IdentitySpec, QuantizeSpec, TopKSpec, FCAESpec,
-                  ChunkedAESpec, ComposedSpec]
+                  ChunkedAESpec, ComposedSpec, "PartitionSpec"]
+
+
+def _partition_mod():
+    from repro.core import partition
+    return partition
+
+
+def is_partitioned(spec) -> bool:
+    """True for a ``partition.PartitionSpec`` (per-layer codec partitions,
+    DESIGN.md §10) — the schedulers route those through the grouped fused
+    server path instead of the single-spec one."""
+    return isinstance(spec, _partition_mod().PartitionSpec)
 
 
 def ae_spec(spec: CodecSpec) -> Optional[Union[FCAESpec, ChunkedAESpec]]:
@@ -149,6 +165,8 @@ def encode(spec: CodecSpec, params: Optional[Params],
            flat: jax.Array) -> Payload:
     """Pure collaborator-side encoder. ``params`` is the AE parameter pytree
     for the AE specs, ``None`` otherwise. Jit-able with ``spec`` static."""
+    if is_partitioned(spec):
+        return _partition_mod().encode_tree(spec, params, flat)
     if isinstance(spec, IdentitySpec):
         return {"flat": flat}
     if isinstance(spec, QuantizeSpec):
@@ -196,6 +214,8 @@ def decode(spec: CodecSpec, params: Optional[Params],
     """Pure aggregator-side decoder → flat ``(spec.size,)`` vector. No
     traced→Python casts: every length/shape is static spec data, so the
     whole function stages into one XLA computation under ``jax.jit``."""
+    if is_partitioned(spec):
+        return _partition_mod().decode_tree(spec, params, payload)
     if isinstance(spec, IdentitySpec):
         return payload["flat"]
     if isinstance(spec, QuantizeSpec):
@@ -240,6 +260,9 @@ def decode_batched(spec: CodecSpec, params: Optional[Params],
     otherwise the shared-params fast path reshapes the client axis into the
     existing batch dimension of each kernel, which is bit-identical to
     per-client decoding for the pointwise codecs."""
+    if is_partitioned(spec):
+        return _partition_mod().decode_tree_batched(
+            spec, params, stacked, params_batched=params_batched)
     if params_batched:
         return jax.vmap(lambda p, pl: decode(spec, p, pl))(params, stacked)
     if isinstance(spec, IdentitySpec):
@@ -323,6 +346,21 @@ def decode_and_aggregate(spec: CodecSpec, params: Optional[Params],
     the full-model-sized reconstructions are never materialized per client
     (DESIGN.md §7.1)."""
     w = weights.astype(jnp.float32)
+    if is_partitioned(spec):
+        # partitioned homogeneous cohort: one fused reduction per group,
+        # all inlined into this single jitted call (kernel-path chunked-AE
+        # groups still take the Pallas fused branch). Heterogeneous
+        # partitioned cohorts go through the scheduler's grouped path
+        # (partition.server_decode_aggregate, DESIGN.md §10.2) instead.
+        part = _partition_mod()
+        means = {}
+        for name, slices, cspec in spec.groups:
+            p = None if params is None else params.get(name)
+            base_g = None if base is None else part.gather(slices, base)
+            means[name] = decode_and_aggregate(
+                cspec, p, stacked[name], w, base_g,
+                params_batched=params_batched and p is not None)
+        return part.scatter_groups(spec.structure, means, spec.size)
     if (isinstance(spec, ChunkedAESpec) and spec.use_kernel
             and not params_batched):
         mean = _fused_chunked_decode_agg(spec, params, stacked["z"], w)

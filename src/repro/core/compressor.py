@@ -22,6 +22,8 @@ Implementations:
 * FCAE               — paper-faithful full fully-connected AE
 * ChunkedAE          — TPU-scale shared-chunk AE (DESIGN.md §3.2)
 * Composed           — AE then latent quantization ("orthogonal add-on", §4.2)
+* Partitioned        — per-layer codec partitions: one sub-compressor per
+  named leaf group of the model pytree (DESIGN.md §10)
 
 Every compressor reports ``compressed_bytes``/``original_bytes`` so the
 federated runtime can account the savings ratio (paper Eq. 4).
@@ -105,8 +107,18 @@ class Compressor:
         """The AE-backed compressor inside this adapter: ``self`` for the AE
         codecs, the wrapped inner one for ``Composed``, ``None`` for the
         pointwise codecs. The AE lifecycle (DESIGN.md §8) uses this to find
-        the refittable params behind whatever adapter a client runs."""
+        the refittable params behind whatever adapter a client runs.
+        ``PartitionedCompressor`` returns None here — it may hold *several*
+        AE-backed groups; use :func:`partitioned` + its per-group subs."""
         return None
+
+    def set_codec_params(self, restored: Any) -> None:
+        """Restore checkpointed codec params into this adapter (the inverse
+        of :meth:`codec_params` for AE-backed codecs; no-op payload for
+        pointwise ones). ``PartitionedCompressor`` fans the per-group dict
+        out to its sub-compressors."""
+        if restored is not None:
+            self.ae_compressor().params = restored
 
     def encode(self, update: Pytree) -> Pytree:
         flat, _ = ravel_pytree(update)
@@ -228,3 +240,69 @@ class ComposedCompressor(Compressor):
 
     def ae_compressor(self):
         return self.inner.ae_compressor()
+
+
+@dataclasses.dataclass
+class PartitionedCompressor(Compressor):
+    """Per-layer codec partitions (DESIGN.md §10): one sub-compressor per
+    named leaf group of a frozen ``partition.PartitionMap``. ``spec(n)``
+    assembles the jit-static ``partition.PartitionSpec`` from the current
+    sub-compressors (so a rate-control rung switch that swaps one group's
+    sub-compressor is visible on the next encode), ``codec_params()`` is
+    the per-group ``{name: params_or_None}`` dict the partition codec
+    functions consume. The AE lifecycle and rate controllers address the
+    AE-backed groups individually via :func:`partitioned` — this adapter
+    deliberately has no single ``ae_compressor()``."""
+
+    pmap: Any                               # partition.PartitionMap
+    compressors: Dict[str, Compressor]
+    name: str = "partitioned"
+
+    def __post_init__(self):
+        assert set(self.compressors) == set(self.pmap.names), (
+            f"sub-compressor keys {sorted(self.compressors)} != partition "
+            f"groups {sorted(self.pmap.names)}")
+
+    def spec(self, n: int):
+        from repro.core import partition
+        assert n == self.pmap.size, (
+            f"update has {n} params but the partition map covers "
+            f"{self.pmap.size}")
+        subs = {name: comp.spec(self.pmap.group_size(name))
+                for name, comp in self.compressors.items()}
+        # sub-compressors only change on an explicit rung switch, so cache
+        # the assembled (and tiling-revalidated) PartitionSpec keyed on the
+        # current sub-specs — per-encode assembly cost would otherwise
+        # scale with the leaf count on by_leaf partitions of large models
+        key = tuple(sorted(subs.items(), key=lambda kv: kv[0]))
+        cached = getattr(self, "_spec_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        spec = partition.make_partition_spec(self.pmap, subs)
+        self._spec_cache = (key, spec)
+        return spec
+
+    def codec_params(self):
+        return {name: comp.codec_params()
+                for name, comp in self.compressors.items()}
+
+    def set_codec_params(self, restored) -> None:
+        if restored is None:
+            return
+        for name, p in restored.items():
+            if p is not None:
+                self.compressors[name].ae_compressor().params = p
+
+    def ae_groups(self) -> Dict[str, Compressor]:
+        """The AE-backed sub-compressors, keyed by group name — what the
+        lifecycle buffers/refits and the controllers refit-on-switch."""
+        return {name: comp.ae_compressor()
+                for name, comp in self.compressors.items()
+                if comp.ae_compressor() is not None}
+
+
+def partitioned(comp: Compressor) -> Optional[PartitionedCompressor]:
+    """``comp`` as a :class:`PartitionedCompressor`, or None — how the
+    lifecycle/rate-control layers detect per-partition clients without
+    isinstance checks sprinkled everywhere."""
+    return comp if isinstance(comp, PartitionedCompressor) else None

@@ -73,7 +73,11 @@ class RoundRecord:
     bytes_down: float = 0.0            # server↔collaborator model syncs
     bytes_down_raw: float = 0.0
     bytes_decoder: float = 0.0         # decoder-sync share of bytes_down
-    ae_syncs: Optional[List[int]] = None        # clients that shipped one
+    # clients that shipped a decoder this round (a multiset of ships). Flat
+    # runs list client ids; partitioned runs (DESIGN.md §10) list
+    # ``(client, group)`` pairs so savings.reconcile can sum per-partition
+    # decoder ships against each partition's own Eq. 5/6 Cost term.
+    ae_syncs: Optional[List] = None
     participants: Optional[List[int]] = None    # client ids in this round
     staleness: Optional[List[int]] = None       # async only, per participant
     sim_time: float = 0.0              # async only: simulated clock
@@ -160,9 +164,12 @@ class FederatedRun:
                 "effective_ratio": raw / max(up, 1.0)}
 
     # ------------------------------------------------------------------
-    def savings_report(self, model: "SavingsModel") -> Dict[str, float]:
+    def savings_report(self, model) -> Dict[str, float]:
         """Reconcile this run's observed byte accounting against the
-        paper's Eq. 4–6 analytics (``savings.reconcile``, DESIGN.md §8.3)."""
+        paper's Eq. 4–6 analytics (``savings.reconcile``, DESIGN.md §8.3).
+        ``model`` is one ``SavingsModel``, or — under per-layer codec
+        partitions — a ``{group_name: SavingsModel}`` mapping so the Cost
+        term sums each partition's own decoder ships (DESIGN.md §10.4)."""
         from repro.core.savings import reconcile
         return reconcile(model, self.history)
 
@@ -224,8 +231,9 @@ class FederatedRun:
             self.clients = meta["client_states"]
         for comp, restored in zip(self.compressors,
                                   meta.get("codec_params") or []):
-            if restored is not None:
-                comp.ae_compressor().params = restored
+            # PartitionedCompressor fans the per-group dict out to its
+            # sub-compressors; AE adapters restore their params directly
+            comp.set_codec_params(restored)
         if rc is not None and meta.get("ratecontrol") is not None:
             rc.load_state(meta["ratecontrol"], meta["ratecontrol_tree"])
         self.history = []

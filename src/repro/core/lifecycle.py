@@ -91,28 +91,92 @@ class AELifecycle:
     def observe(self, state, compressor, flat: jax.Array) -> None:
         """Record the flat vector a client just encoded (called from the
         schedulers' shared ``_encode_local``). Pointwise codecs have
-        nothing to refit, so only AE-backed clients buffer."""
+        nothing to refit, so only AE-backed clients buffer. Partitioned
+        clients (DESIGN.md §10) buffer **per group**: each AE-backed
+        group's gathered segment lands in its own
+        ``ClientState.part_snapshots`` ring — the group's codec sees only
+        its slice of the update, so that slice is its refit distribution."""
+        from repro.core.compressor import partitioned
+        pc = partitioned(compressor)
+        if pc is not None:
+            from repro.core import partition
+            for name in pc.ae_groups():
+                seg = partition.gather(pc.pmap.slices_of(name), flat)
+                ring = state.part_snapshots.setdefault(name, [])
+                ring.append(jnp.asarray(seg))
+                del ring[:-self.buffer_size]
+            return
         if compressor.ae_compressor() is None:
             return
         buffer_snapshot(state, flat, self.buffer_size)
 
     # ------------------------------------------------------------------
+    # Lanes: the unit of lifecycle bookkeeping. A lane is a client index
+    # (flat codecs) or a ``(client, group_name)`` pair (per-layer codec
+    # partitions, DESIGN.md §10) — one lane per decoder the server holds.
+    # ------------------------------------------------------------------
+    def _lane_comp(self, run, lane):
+        """The refittable AE sub-compressor behind ``lane``."""
+        from repro.core.compressor import partitioned
+        if isinstance(lane, tuple):
+            ci, name = lane
+            return partitioned(run.compressors[ci]).ae_groups()[name]
+        return run.compressors[lane].ae_compressor()
+
+    def _lane_snaps(self, run, lane) -> List[jax.Array]:
+        if isinstance(lane, tuple):
+            ci, name = lane
+            return run.clients[ci].part_snapshots.get(name, [])
+        return run.clients[lane].snapshots
+
+    def _lane_baseline(self, run, lane) -> Optional[float]:
+        snaps = self._lane_snaps(run, lane)
+        if not snaps:
+            return None
+        return self._rel_err(self._lane_comp(run, lane), snaps[-1])
+
+    # ------------------------------------------------------------------
     def end_of_round(self, run, r: int, participants: Sequence[int]
-                     ) -> Tuple[float, List[int]]:
+                     ) -> Tuple[float, List]:
         """Advance the lifecycle after round ``r``'s aggregation: decide
         refreshes for this round's participants, refit (cohort-batched
-        where possible), and return ``(decoder_bytes, synced_client_ids)``
-        for the scheduler's RoundRecord. Runs *after* the server aggregate
-        on purpose — this round's payloads were decoded with the decoder
-        that encoded them; a refreshed decoder takes effect next round."""
+        where possible), and return ``(decoder_bytes, synced_lanes)`` for
+        the scheduler's RoundRecord — client ids for flat clients,
+        ``(client, group)`` pairs for partitioned ones (each group's
+        decoder ships and refreshes on its own schedule, DESIGN.md §10.4).
+        Runs *after* the server aggregate on purpose — this round's
+        payloads were decoded with the decoder that encoded them; a
+        refreshed decoder takes effect next round."""
         bytes_dec = 0.0
-        synced: List[int] = []
-        todo: List[int] = []
+        synced: List = []
+        todo: List = []
+        from repro.core.compressor import partitioned
         for ci in sorted(set(participants)):
+            st = run.clients[ci]
+            pc = partitioned(run.compressors[ci])
+            if pc is not None:
+                for name, sub in sorted(pc.ae_groups().items()):
+                    lane = (ci, name)
+                    if st.part_last_refresh.get(name, -1) < 0:
+                        # this group's first participation: charge its
+                        # pre-pass decoder ship (one Eq.-5 sync per group)
+                        st.part_last_refresh[name] = r
+                        if self.ship_initial:
+                            bytes_dec += ae.decoder_sync_bytes(
+                                sub.codec_params())
+                            synced.append(lane)
+                        st.part_baseline[name] = \
+                            self._lane_baseline(run, lane)
+                        continue
+                    if self._should_refresh(
+                            r, sub, self._lane_snaps(run, lane),
+                            st.part_last_refresh[name],
+                            st.part_baseline.get(name)):
+                        todo.append(lane)
+                continue
             comp = run.compressors[ci].ae_compressor()
             if comp is None:
                 continue
-            st = run.clients[ci]
             if st.last_refresh < 0:
                 # first participation: the pre-pass decoder the server has
                 # been decoding with gets charged here (one Eq.-5 sync)
@@ -122,28 +186,37 @@ class AELifecycle:
                     synced.append(ci)
                 st.ae_baseline = self._baseline(comp, st)
                 continue
-            if self._should_refresh(r, comp, st):
+            if self._should_refresh(r, comp, st.snapshots,
+                                    st.last_refresh, st.ae_baseline):
                 todo.append(ci)
-        for ci, new_params in self._refit(run, r, todo):
-            comp = run.compressors[ci].ae_compressor()
+        for lane, new_params in self._refit(run, r, todo):
+            comp = self._lane_comp(run, lane)
             comp.params = new_params
-            st = run.clients[ci]
-            st.last_refresh = r
-            st.ae_baseline = self._baseline(comp, st)
+            if isinstance(lane, tuple):
+                ci, name = lane
+                st = run.clients[ci]
+                st.part_last_refresh[name] = r
+                st.part_baseline[name] = self._lane_baseline(run, lane)
+            else:
+                st = run.clients[lane]
+                st.last_refresh = r
+                st.ae_baseline = self._baseline(comp, st)
             bytes_dec += ae.decoder_sync_bytes(new_params)
-            synced.append(ci)
+            synced.append(lane)
         return bytes_dec, synced
 
     # ------------------------------------------------------------------
-    def _should_refresh(self, r: int, comp, st) -> bool:
-        if len(st.snapshots) < self.min_snapshots:
+    def _should_refresh(self, r: int, comp, snaps: List[jax.Array],
+                        last_refresh: int, baseline: Optional[float]
+                        ) -> bool:
+        if len(snaps) < self.min_snapshots:
             return False
         if (self.refresh_every is not None
-                and r - st.last_refresh >= self.refresh_every):
+                and r - last_refresh >= self.refresh_every):
             return True
-        if self.drift_ratio is not None and st.ae_baseline is not None:
-            err = self._rel_err(comp, st.snapshots[-1])
-            return err > self.drift_ratio * st.ae_baseline
+        if self.drift_ratio is not None and baseline is not None:
+            err = self._rel_err(comp, snaps[-1])
+            return err > self.drift_ratio * baseline
         return False
 
     def _rel_err(self, comp, flat: jax.Array) -> float:
@@ -156,12 +229,13 @@ class AELifecycle:
         return self._rel_err(comp, st.snapshots[-1])
 
     # ------------------------------------------------------------------
-    def _refit_dataset(self, comp, st) -> Tuple[Any, jax.Array]:
-        """(fc-config, training rows) for one client's refit. FCAE trains
+    def _refit_dataset(self, comp, snaps: List[jax.Array]
+                       ) -> Tuple[Any, jax.Array]:
+        """(fc-config, training rows) for one lane's refit. FCAE trains
         on padded snapshot rows; the chunked AE trains its shared funnel on
         every chunk of every snapshot."""
-        spec = codec.ae_spec(comp.spec(st.snapshots[0].shape[0]))
-        stackd = jnp.stack(st.snapshots)
+        spec = codec.ae_spec(comp.spec(snaps[0].shape[0]))
+        stackd = jnp.stack(snaps)
         if isinstance(spec, codec.FCAESpec):
             pad = spec.cfg.input_dim - stackd.shape[1]
             if pad:
@@ -169,46 +243,63 @@ class AELifecycle:
             return spec.cfg, stackd
         assert isinstance(spec, codec.ChunkedAESpec)
         rows = jnp.concatenate([
-            ae.chunk_vector(s, spec.cfg.chunk_size)[0] for s in st.snapshots])
+            ae.chunk_vector(s, spec.cfg.chunk_size)[0] for s in snaps])
         return spec.cfg.as_fc(), rows
 
     def _rng(self, r: int, ci: int) -> jax.Array:
         return jax.random.PRNGKey(
             (self.seed * 1_000_003 + r * 1009 + ci) % 2 ** 31)
 
-    def _refit(self, run, r: int, todo: List[int]
-               ) -> List[Tuple[int, Pytree]]:
-        """Warm-start refits for ``todo``, grouping same-shaped fits into
-        one ``train_autoencoder_cohort`` dispatch (DESIGN.md §8.1)."""
-        groups: Dict[Tuple[Any, Tuple[int, ...]], List[Tuple[int, jax.Array]]]
-        groups = {}
-        for ci in todo:
-            comp = run.compressors[ci].ae_compressor()
-            fc_cfg, rows = self._refit_dataset(comp, run.clients[ci])
-            groups.setdefault((fc_cfg, rows.shape), []).append((ci, rows))
+    def _lane_rng(self, run, r: int, lane) -> jax.Array:
+        """Per-lane refit seed. Flat lanes keep the pre-§10 stream exactly
+        (trajectory preservation); partition lanes fold the group's index
+        in the client's partition map into the stream so two groups
+        refitting the same round draw distinct shuffles."""
+        if not isinstance(lane, tuple):
+            return self._rng(r, lane)
+        ci, name = lane
+        from repro.core.compressor import partitioned
+        gi = list(partitioned(run.compressors[ci]).pmap.names).index(name)
+        return jax.random.PRNGKey(
+            (self.seed * 1_000_003 + r * 1009 + ci + (gi + 1) * 7919)
+            % 2 ** 31)
 
-        out: List[Tuple[int, Pytree]] = []
+    def _refit(self, run, r: int, todo: List
+               ) -> List[Tuple[Any, Pytree]]:
+        """Warm-start refits for the ``todo`` lanes, grouping same-shaped
+        fits — across clients AND partition groups — into one
+        ``train_autoencoder_cohort`` dispatch (DESIGN.md §8.1/§10.4)."""
+        groups: Dict[Tuple[Any, Tuple[int, ...]], List[Tuple[Any, jax.Array]]]
+        groups = {}
+        for lane in todo:
+            comp = self._lane_comp(run, lane)
+            fc_cfg, rows = self._refit_dataset(
+                comp, self._lane_snaps(run, lane))
+            groups.setdefault((fc_cfg, rows.shape), []).append((lane, rows))
+
+        out: List[Tuple[Any, Pytree]] = []
         kw = dict(epochs=self.refresh_epochs, batch_size=self.batch_size,
                   lr=self.lr, val_fraction=self.val_fraction,
                   refit_normalizer=self.refit_normalizer)
         for (fc_cfg, _), members in groups.items():
             if len(members) == 1:
-                ci, rows = members[0]
-                comp = run.compressors[ci].ae_compressor()
+                lane, rows = members[0]
+                comp = self._lane_comp(run, lane)
                 params, _ = ae.train_autoencoder_scan(
-                    self._rng(r, ci), fc_cfg, rows,
+                    self._lane_rng(run, r, lane), fc_cfg, rows,
                     init=comp.codec_params(), **kw)
-                out.append((ci, params))
+                out.append((lane, params))
                 continue
-            rngs = jnp.stack([self._rng(r, ci) for ci, _ in members])
+            rngs = jnp.stack([self._lane_rng(run, r, lane)
+                              for lane, _ in members])
             datasets = jnp.stack([rows for _, rows in members])
             init = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs),
-                *[run.compressors[ci].ae_compressor().codec_params()
-                  for ci, _ in members])
+                *[self._lane_comp(run, lane).codec_params()
+                  for lane, _ in members])
             stacked, _ = ae.train_autoencoder_cohort(
                 rngs, fc_cfg, datasets, init=init, **kw)
-            for k, (ci, _) in enumerate(members):
-                out.append((ci, jax.tree_util.tree_map(
+            for k, (lane, _) in enumerate(members):
+                out.append((lane, jax.tree_util.tree_map(
                     lambda x, k=k: x[k], stacked)))
         return out

@@ -1,0 +1,354 @@
+"""Pytree-native per-layer codec partitions (DESIGN.md §10).
+
+The paper trains one autoencoder **per layer** of the client model ("the
+encoder is set up on each of the nodes", with per-tensor compression ratios
+of 500–1720×), and FedZip (Malekijoo et al., 2021) shows layer-wise codec
+selection is where the wins are — but until now the runtime raveled the
+whole client pytree into one flat vector and compressed it with a single
+spec, so a conv kernel and its bias shared one latent and one rate-control
+rung. This module makes the mapping *leaf group → codec* first-class:
+
+* :class:`PartitionMap` — the frozen **structural** half: named groups of
+  model leaves, each group a tuple of ``(offset, size)`` slices into the
+  ``ravel_pytree`` order of the model. Built once from a model template by
+  :func:`identity_partition`, :func:`by_leaf_partition`, or
+  :func:`by_layer_partition` and shared by every client (a federation
+  shares one model, so it shares one partition structure).
+* :class:`PartitionSpec` — the structural map **plus** one frozen
+  ``CodecSpec`` per group. Hashable, so it is a valid jit-static spec and a
+  drop-in member of the ``codec.CodecSpec`` union: ``codec.encode/decode/
+  decode_batched/decode_and_aggregate/wire_bytes`` all dispatch on it, and
+  ``Compressor``-level code (``_encode_local``, error feedback,
+  ``codec_stats``) works unchanged.
+* pure :func:`encode_tree`/:func:`decode_tree` — per-group gather →
+  sub-codec encode; sub-codec decode → scatter. The identity partition
+  (one group covering every leaf in ravel order) gathers and scatters with
+  full-range slices, so its trajectories are **bit-identical** to the flat
+  path (asserted at the repo's 1-ulp tolerance rule end-to-end).
+* the grouped fused server path — :func:`server_decode_aggregate` reuses
+  PR 4's group-by-spec machinery one level down: for each partition group
+  it buckets the cohort by that group's codec spec and issues exactly ONE
+  ``codec.decode_and_aggregate`` per (partition, spec) group per round
+  (each a single jitted fused decode→aggregate; ``ChunkedAESpec``
+  kernel-path groups launch one Pallas ``fused_decode_agg`` each), scaling
+  sub-cohort means back by their weight mass exactly as the flat
+  heterogeneous path does (DESIGN.md §9.2).
+
+Params for a partitioned spec are a dict ``{group_name: ae_params_or_None}``
+(the :class:`~repro.core.compressor.PartitionedCompressor` adapter builds
+it), and payloads are ``{group_name: payload_dict}`` — still fixed-shape
+array pytrees, so they stack along a client axis like any other payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+
+Pytree = Any
+Slices = Tuple[Tuple[int, int], ...]      # ((offset, size), ...) in ravel order
+
+
+# =====================================================================
+# structural half: named leaf groups as flat-vector slices
+# =====================================================================
+@dataclasses.dataclass(frozen=True)
+class PartitionMap:
+    """Frozen structural partition: ``groups[i] = (name, slices)`` where the
+    slices index the ``ravel_pytree`` flat order of the model template. The
+    map carries no codec choices — those live in :class:`PartitionSpec` (or
+    per-group ``Compressor`` adapters) — so one map can serve every rung of
+    a per-partition rate-control ladder (DESIGN.md §10.3)."""
+
+    groups: Tuple[Tuple[str, Slices], ...]
+
+    def __post_init__(self):
+        names = [n for n, _ in self.groups]
+        assert len(set(names)) == len(names), f"duplicate group names {names}"
+        covered = sorted(
+            (o, s) for _, sl in self.groups for o, s in sl)
+        pos = 0
+        for o, s in covered:
+            assert s > 0, "empty slice in partition map"
+            assert o == pos, (
+                f"partition slices must tile the flat vector: gap/overlap "
+                f"at offset {o} (expected {pos})")
+            pos = o + s
+        object.__setattr__(self, "_size", pos)
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.groups)
+
+    def group_size(self, name: str) -> int:
+        return sum(s for _, s in self.slices_of(name))
+
+    def slices_of(self, name: str) -> Slices:
+        return dict(self.groups)[name]
+
+
+def _leaf_segments(template: Pytree) -> List[Tuple[str, int, int]]:
+    """(path-name, offset, size) per leaf of ``template`` in ravel order."""
+    leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    out, pos = [], 0
+    for path, leaf in leaves:
+        name = "/".join(_key_str(p) for p in path)
+        size = int(jnp.size(leaf))
+        out.append((name, pos, size))
+        pos += size
+    return out
+
+
+def _key_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def identity_partition(template: Pytree, name: str = "all") -> PartitionMap:
+    """One group covering every leaf in ravel order — the compatibility
+    partition whose trajectories must reproduce the flat path bit-for-bit
+    (its gather/scatter are full-range slices)."""
+    segs = _leaf_segments(template)
+    total = sum(s for _, _, s in segs)
+    return PartitionMap(groups=((name, ((0, total),)),))
+
+
+def by_leaf_partition(template: Pytree) -> PartitionMap:
+    """One group per model leaf (the paper's one-AE-per-weight-tensor
+    reading): group names are the ``/``-joined pytree paths."""
+    segs = _leaf_segments(template)
+    return PartitionMap(groups=tuple(
+        (name, ((off, size),)) for name, off, size in segs))
+
+
+def by_layer_partition(template: Pytree,
+                       key_fn: Optional[Callable[[str], str]] = None
+                       ) -> PartitionMap:
+    """Group leaves by ``key_fn`` of their path (default: the first path
+    component, so ``dense0/w`` and ``dense0/b`` share the ``dense0`` group
+    — one codec per *layer*, the FedZip granularity). Groups keep first-seen
+    order; a group's slices may be non-contiguous in the flat vector (its
+    codec sees the concatenation)."""
+    key_fn = key_fn or (lambda path: path.split("/")[0])
+    segs = _leaf_segments(template)
+    grouped: Dict[str, List[Tuple[int, int]]] = {}
+    for name, off, size in segs:
+        grouped.setdefault(key_fn(name), []).append((off, size))
+    return PartitionMap(groups=tuple(
+        (k, tuple(v)) for k, v in grouped.items()))
+
+
+# =====================================================================
+# full spec: structure + one codec per group (a CodecSpec union member)
+# =====================================================================
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """A :class:`PartitionMap` with one frozen ``CodecSpec`` per group:
+    ``groups[i] = (name, slices, codec_spec)``. Hashable → jit-static; the
+    ``codec`` module's encode/decode/aggregate entry points dispatch on it
+    (DESIGN.md §10.1)."""
+
+    groups: Tuple[Tuple[str, Slices, codec.CodecSpec], ...]
+
+    def __post_init__(self):
+        PartitionMap(groups=tuple((n, sl) for n, sl, _ in self.groups))
+        for name, sl, spec in self.groups:
+            gsize = sum(s for _, s in sl)
+            assert spec.size == gsize, (
+                f"group {name!r}: codec spec sized {spec.size} but the "
+                f"group's leaves total {gsize}")
+
+    @property
+    def size(self) -> int:
+        return sum(s for _, sl, _ in self.groups for _, s in sl)
+
+    @property
+    def structure(self) -> Tuple[Tuple[str, Slices], ...]:
+        """The codec-free structural half — what must agree across a cohort
+        for the grouped server path to aggregate it."""
+        return tuple((n, sl) for n, sl, _ in self.groups)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _, _ in self.groups)
+
+    def spec_of(self, name: str) -> codec.CodecSpec:
+        return {n: sp for n, _, sp in self.groups}[name]
+
+
+def make_partition_spec(pmap: PartitionMap,
+                        specs: Dict[str, codec.CodecSpec]) -> PartitionSpec:
+    """Bind one codec spec per group of ``pmap`` (keys must match)."""
+    assert set(specs) == set(pmap.names), (
+        f"spec keys {sorted(specs)} != partition groups "
+        f"{sorted(pmap.names)}")
+    return PartitionSpec(groups=tuple(
+        (name, sl, specs[name]) for name, sl in pmap.groups))
+
+
+# =====================================================================
+# pure gather/scatter between the model-flat vector and group vectors
+# =====================================================================
+def gather(slices: Slices, flat: jax.Array) -> jax.Array:
+    """Concatenate a group's slices out of the model-flat vector. All
+    offsets/sizes are static, so this stages into XLA slices under jit; a
+    single full-range slice (the identity partition) is the vector itself,
+    bit-for-bit."""
+    if len(slices) == 1:
+        o, s = slices[0]
+        return jax.lax.slice_in_dim(flat, o, o + s, axis=-1)
+    return jnp.concatenate(
+        [jax.lax.slice_in_dim(flat, o, o + s, axis=-1) for o, s in slices],
+        axis=-1)
+
+
+def scatter_groups(spec_structure: Sequence[Tuple[str, Slices]],
+                   group_vecs: Dict[str, jax.Array],
+                   size: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of per-group :func:`gather`: place every group's (possibly
+    batched ``(..., group_size)``) vector back into a ``(..., size)``
+    model-flat vector. Groups tile the vector (PartitionMap invariant), so
+    every element is written exactly once."""
+    lead = next(iter(group_vecs.values())).shape[:-1]
+    out = jnp.zeros(lead + (size,), dtype)
+    for name, slices in spec_structure:
+        vec = group_vecs[name]
+        pos = 0
+        for o, s in slices:
+            seg = jax.lax.slice_in_dim(vec, pos, pos + s, axis=-1)
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, seg.astype(dtype), o, axis=-1)
+            pos += s
+    return out
+
+
+# =====================================================================
+# pure per-partition encode/decode (the codec module dispatches here)
+# =====================================================================
+def encode_tree(spec: PartitionSpec, params: Optional[Dict[str, Pytree]],
+                flat: jax.Array) -> Dict[str, codec.Payload]:
+    """Collaborator-side: gather each group out of the model-flat vector
+    and run its own codec → ``{group_name: payload}``. Pure and jit-able
+    with ``spec`` static (DESIGN.md §10.1)."""
+    out = {}
+    for name, slices, cspec in spec.groups:
+        p = None if params is None else params.get(name)
+        out[name] = codec.encode(cspec, p, gather(slices, flat))
+    return out
+
+
+def decode_tree(spec: PartitionSpec, params: Optional[Dict[str, Pytree]],
+                payloads: Dict[str, codec.Payload]) -> jax.Array:
+    """Aggregator-side inverse: decode every group and scatter the results
+    back into one ``(spec.size,)`` model-flat vector."""
+    vecs = {}
+    for name, slices, cspec in spec.groups:
+        p = None if params is None else params.get(name)
+        vecs[name] = codec.decode(cspec, p, payloads[name])
+    return scatter_groups(spec.structure, vecs, spec.size)
+
+
+def decode_tree_batched(spec: PartitionSpec,
+                        params: Optional[Dict[str, Pytree]],
+                        stacked: Dict[str, codec.Payload], *,
+                        params_batched: bool = False) -> jax.Array:
+    """Cohort-batched decode: per-group ``codec.decode_batched`` then a
+    batched scatter → ``(C, spec.size)``."""
+    vecs = {}
+    for name, slices, cspec in spec.groups:
+        p = None if params is None else params.get(name)
+        vecs[name] = codec.decode_batched(
+            cspec, p, stacked[name],
+            # pointwise groups carry no params: keep their shared fast path
+            params_batched=params_batched and p is not None)
+    return scatter_groups(spec.structure, vecs, spec.size)
+
+
+def wire_bytes_by_group(spec: PartitionSpec,
+                        params: Optional[Dict[str, Pytree]] = None
+                        ) -> Dict[str, int]:
+    """Per-partition uplink price list: ``codec.wire_bytes`` of each
+    group's codec (eval-shape, nothing runs). Sums to
+    ``codec.wire_bytes(spec, params)`` — the same single pricing rule the
+    rate controllers plan per-(client, partition) ladders with
+    (DESIGN.md §10.3)."""
+    out = {}
+    for name, _, cspec in spec.groups:
+        p = None if params is None else params.get(name)
+        out[name] = codec.wire_bytes(cspec, p)
+    return out
+
+
+# =====================================================================
+# the grouped fused server path: one fused call per (partition, spec) group
+# =====================================================================
+def server_decode_aggregate(encoded: Sequence, norm_weights: List[float],
+                            base: Optional[jax.Array]) -> jax.Array:
+    """Fused decode→aggregate for a partitioned cohort: for each partition
+    group, bucket the cohort by that group's codec spec and issue exactly
+    one ``codec.decode_and_aggregate`` per (partition, spec) bucket —
+    heterogeneous cohorts × heterogeneous layers still hit the fused path
+    (DESIGN.md §10.2). ``encoded`` entries are the scheduler's
+    ``EncodedUpdate``s whose ``spec`` is a :class:`PartitionSpec`;
+    ``norm_weights`` must sum to 1 (``aggregate.normalize_weights``).
+
+    A single-bucket group reduces with the cohort weights directly — the
+    bit-stable homogeneous path, so the identity partition reproduces the
+    flat reduction exactly. A multi-bucket group renormalizes each bucket
+    to Σ=1 (``decode_and_aggregate``'s contract; the kernel-path chunked AE
+    denorms and subtracts ``base`` on that assumption) and scales its mean
+    back by the bucket's weight mass, exactly as the flat heterogeneous
+    path does (DESIGN.md §9.2)."""
+    spec0: PartitionSpec = encoded[0].spec
+    structure = spec0.structure
+    for e in encoded:
+        assert isinstance(e.spec, PartitionSpec) and \
+            e.spec.structure == structure, (
+                "partitioned cohorts must share one partition structure "
+                "(groups/slices); per-group codec specs may differ")
+    norm_w = jnp.asarray(norm_weights, jnp.float32)
+    group_means: Dict[str, jax.Array] = {}
+    for gi, (name, slices) in enumerate(structure):
+        base_g = None if base is None else gather(slices, base)
+        buckets: Dict[codec.CodecSpec, List[int]] = {}
+        for i, e in enumerate(encoded):
+            buckets.setdefault(e.spec.groups[gi][2], []).append(i)
+        mean_g = None
+        for cspec, idx in buckets.items():
+            stacked = codec.stack_payloads(
+                [encoded[i].payload[name] for i in idx])
+            plist = [None if encoded[i].params is None
+                     else encoded[i].params.get(name) for i in idx]
+            if all(p is plist[0] for p in plist):
+                params, pb = plist[0], False
+            else:
+                params = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *plist)
+                pb = True
+            if len(buckets) == 1:
+                mean_g = codec.decode_and_aggregate(
+                    cspec, params, stacked, norm_w, base_g,
+                    params_batched=pb)
+                break
+            s_g = sum(norm_weights[i] for i in idx)    # host float: stable
+            w_g = jnp.asarray([norm_weights[i] / s_g for i in idx],
+                              jnp.float32)
+            part = codec.decode_and_aggregate(cspec, params, stacked, w_g,
+                                              base_g, params_batched=pb)
+            contrib = jnp.float32(s_g) * part
+            mean_g = contrib if mean_g is None else mean_g + contrib
+        group_means[name] = mean_g
+    return scatter_groups(structure, group_means, spec0.size)

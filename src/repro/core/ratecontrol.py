@@ -47,18 +47,22 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.paper import AEConfig
 from repro.core import autoencoder as ae
 from repro.core import codec
 from repro.core.compressor import (ComposedCompressor, Compressor,
-                                   FCAECompressor)
+                                   FCAECompressor, PartitionedCompressor,
+                                   partitioned)
 from repro.core.lifecycle import (AELifecycle, _rel_recon_err,
                                   buffer_snapshot)
 
 Pytree = Any
-Ladder = List[List[Compressor]]          # [client][rung], cheapest first
+# [client][rung] (flat), or [client]{group: [rung]} (per-partition ladders,
+# DESIGN.md §10.3) — cheapest-uplink-first within every rung list
+Ladder = List[Any]
 
 
 def fc_ae_ladder(n_clients: int, input_dim: int,
@@ -98,6 +102,31 @@ def fc_ae_ladder(n_clients: int, input_dim: int,
     return out
 
 
+def partition_ladder(n_clients: int, pmap,
+                     rung_factories: Dict[str, Sequence],
+                     ) -> Ladder:
+    """Build a per-(client, partition) ladder (DESIGN.md §10.3):
+    ``rung_factories[group] = [factory, ...]`` cheapest-uplink-first, where
+    each ``factory(ci, group_size) -> Compressor`` builds one client's rung
+    for that group (AE rungs want per-client params; pointwise factories
+    can ignore ``ci``). Every partition group of ``pmap`` needs an entry —
+    single-entry groups are pinned (the controller never moves that lane).
+    The returned ladder rows are ``{group: [Compressor, ...]}`` dicts;
+    binding a :class:`RateController` to one installs a
+    ``PartitionedCompressor`` per client and walks each (client, group)
+    lane independently under the shared policy."""
+    assert set(rung_factories) == set(pmap.names), (
+        f"rung factories {sorted(rung_factories)} != partition groups "
+        f"{sorted(pmap.names)}")
+    out: Ladder = []
+    for ci in range(n_clients):
+        out.append({
+            name: [factory(ci, pmap.group_size(name))
+                   for factory in rung_factories[name]]
+            for name in pmap.names})
+    return out
+
+
 @dataclasses.dataclass
 class RateController:
     """Base policy: owns the ladder, the per-client rung occupancy, and the
@@ -122,6 +151,9 @@ class RateController:
     refit_batch: int = 8
     refit_lr: float = 3e-3
     seed: int = 0
+    # the partition.PartitionMap behind a per-partition ladder (rows are
+    # {group: [rungs]} dicts, see partition_ladder) — None for flat ladders
+    partition: Optional[Any] = None
     name: str = "fixed"
 
     # ------------------------------------------------------------------
@@ -134,6 +166,11 @@ class RateController:
             "controller instance per run")
         self.run = run
         n = len(run.datasets)
+        self._partitioned = (self.ladder is not None and len(self.ladder)
+                             and isinstance(self.ladder[0], dict))
+        if self._partitioned:
+            self._bind_partitioned(run, n)
+            return
         if self.ladder is not None:
             assert len(self.ladder) == n, (
                 f"ladder has {len(self.ladder)} clients, run has {n}")
@@ -172,14 +209,91 @@ class RateController:
             "ladder rungs must be ordered cheapest-uplink-first, got wire "
             f"costs {self._costs}")
 
+    def _bind_partitioned(self, run, n: int) -> None:
+        """Per-partition ladders (DESIGN.md §10.3): the unit of control is
+        the *lane* ``(client, group)`` — each walks its own rung list, all
+        lanes share one policy (and, for :class:`ByteBudget`, one budget).
+        Installs a ``PartitionedCompressor`` per client assembled from each
+        group's initial rung; a later switch swaps just that group's
+        sub-compressor in place."""
+        assert self.partition is not None, (
+            "a per-partition ladder (dict rows) needs the controller's "
+            "``partition=`` PartitionMap")
+        assert len(self.ladder) == n, (
+            f"ladder has {len(self.ladder)} clients, run has {n}")
+        names = list(self.partition.names)
+        for ci, row in enumerate(self.ladder):
+            assert set(row) == set(names), (
+                f"client {ci} ladder groups {sorted(row)} != partition "
+                f"groups {sorted(names)}")
+        self._pcomps = [
+            {name: list(self.ladder[ci][name]) for name in names}
+            for ci in range(n)]
+        self._pnrungs = {name: len(self._pcomps[0][name]) for name in names}
+        for ci in range(1, n):
+            for name in names:
+                assert len(self._pcomps[ci][name]) == self._pnrungs[name], (
+                    f"client {ci} group {name!r}: rung count differs")
+        self._prung = [
+            {name: min(self.initial_rung, self._pnrungs[name] - 1)
+             for name in names} for _ in range(n)]
+        self._plast = [{name: -(10 ** 9) for name in names}
+                       for _ in range(n)]
+        for ci in range(n):
+            run.compressors[ci] = PartitionedCompressor(
+                self.partition,
+                {name: self._pcomps[ci][name][self._prung[ci][name]]
+                 for name in names})
+        self._any_ae = any(c.ae_compressor() is not None
+                           for row in self._pcomps
+                           for rungs in row.values() for c in rungs)
+        self._refitter = AELifecycle(
+            buffer_size=self.buffer_size, min_snapshots=self.min_snapshots,
+            refresh_epochs=self.refit_epochs, batch_size=self.refit_batch,
+            lr=self.refit_lr, seed=self.seed)
+        flat, _ = ravel_pytree(run.global_params)
+        self._n = int(flat.size)
+        assert self._n == self.partition.size, (
+            f"partition map covers {self.partition.size} params but the "
+            f"model has {self._n}")
+        # one price list per group: rung k of group g must mean the same
+        # spec for every client (params may differ)
+        for name in names:
+            gsize = self.partition.group_size(name)
+            for ci in range(1, n):
+                for k, c in enumerate(self._pcomps[ci][name]):
+                    assert c.spec(gsize) == \
+                        self._pcomps[0][name][k].spec(gsize), (
+                            f"client {ci} group {name!r} rung {k} spec "
+                            "differs from client 0's — per-rung specs must "
+                            "agree across the ladder")
+        self._pcosts = {
+            name: [codec.wire_bytes(
+                self._pcomps[0][name][k].spec(
+                    self.partition.group_size(name)),
+                self._pcomps[0][name][k].codec_params())
+                for k in range(self._pnrungs[name])]
+            for name in names}
+        for name, costs in self._pcosts.items():
+            assert all(a <= b for a, b in zip(costs, costs[1:])), (
+                f"group {name!r} rungs must be ordered "
+                f"cheapest-uplink-first, got wire costs {costs}")
+
     # ------------------------------------------------------------------
     def rung_of(self, ci: int) -> int:
         return self._rung[ci]
+
+    def rung_of_group(self, ci: int, name: str) -> int:
+        """Current rung of the ``(ci, name)`` lane (per-partition ladders)."""
+        return self._prung[ci][name]
 
     def wire_cost(self, rung: int) -> float:
         """Planned uplink bytes of one payload at ``rung`` (static — from
         ``codec.wire_bytes``, asserted equal to observed encodes)."""
         return float(self._costs[rung])
+
+    def wire_cost_group(self, name: str, rung: int) -> float:
+        return float(self._pcosts[name][rung])
 
     # ------------------------------------------------------------------
     def observe(self, run, state, comp, flat: jax.Array) -> None:
@@ -189,6 +303,20 @@ class RateController:
         true input distribution whatever the current rung is. A ladder
         that cannot move (one rung) buffers nothing: the vectors would be
         model-sized dead weight in memory and in every checkpoint."""
+        if self._partitioned:
+            from repro.core import partition
+            pc = partitioned(comp)
+            ae_groups = pc.ae_groups()
+            for name in self.partition.names:
+                if self._pnrungs[name] <= 1:
+                    continue             # pinned lane: nothing to decide
+                if run.lifecycle is not None and name in ae_groups:
+                    continue             # lifecycle buffered this group
+                seg = partition.gather(pc.pmap.slices_of(name), flat)
+                ring = state.part_snapshots.setdefault(name, [])
+                ring.append(jnp.asarray(seg))
+                del ring[:-self.buffer_size]
+            return
         if self.n_rungs <= 1:
             return
         if run.lifecycle is not None and comp.ae_compressor() is not None:
@@ -219,6 +347,9 @@ class RateController:
             bytes_dec, synced = self._refitter.end_of_round(
                 run, r, participants)
         moves = self.plan(run, r, sorted(set(participants)))
+        if self._partitioned:
+            b, s, switches = self._apply_lane_moves(run, r, moves)
+            return bytes_dec + b, sorted(synced + s), switches
         switches: List[Tuple[int, int, int]] = []
         refit_todo: List[int] = []
         for ci in sorted(moves):
@@ -252,6 +383,52 @@ class RateController:
         # multiset: initial ship + switch re-ship in one round = 2 syncs
         return bytes_dec, sorted(synced), switches
 
+    def _apply_lane_moves(self, run, r: int, moves: Dict
+                          ) -> Tuple[float, List, List]:
+        """Per-partition half of :meth:`end_of_round`: apply ``moves``
+        keyed by ``(client, group)`` lane, swapping just that group's
+        sub-compressor inside the client's ``PartitionedCompressor``;
+        switched-onto AE lanes refit on the group's own snapshot ring and
+        ship that group's decoder (DESIGN.md §10.3). Switch records carry
+        the lane as the client field: ``((ci, group), from, to)``."""
+        bytes_dec, synced = 0.0, []
+        switches: List[Tuple[Any, int, int]] = []
+        refit_todo: List[Tuple[int, str]] = []
+        for lane in sorted(moves):
+            ci, name = lane
+            new = int(moves[lane])
+            old = self._prung[ci][name]
+            if new == old:
+                continue
+            self._prung[ci][name] = new
+            pc = partitioned(run.compressors[ci])
+            pc.compressors[name] = self._pcomps[ci][name][new]
+            self._plast[ci][name] = r
+            switches.append((lane, old, new))
+            if pc.compressors[name].ae_compressor() is not None:
+                refit_todo.append(lane)
+            else:
+                run.clients[ci].part_baseline[name] = None
+        lc = run.lifecycle if run.lifecycle is not None else self._refitter
+        fit_now = [
+            lane for lane in refit_todo
+            if len(run.clients[lane[0]].part_snapshots.get(lane[1], []))
+            >= self.min_snapshots]
+        refit = dict(lc._refit(run, r, fit_now))
+        for lane in refit_todo:
+            ci, name = lane
+            comp = partitioned(run.compressors[ci]).ae_groups()[name]
+            if lane in refit:
+                comp.params = refit[lane]
+            st = run.clients[ci]
+            st.part_last_refresh[name] = r
+            st.part_baseline[name] = lc._lane_baseline(run, lane)
+            # the server cannot decode the new rung without its decoder:
+            # every switch onto an AE rung ships that group's, refit or not
+            bytes_dec += ae.decoder_sync_bytes(comp.params)
+            synced.append(lane)
+        return bytes_dec, synced, switches
+
     # ------------------------------------------------------------------
     def _rung_err(self, run, ci: int, rung: int, flat: jax.Array) -> float:
         """Observed relative reconstruction error of ``flat`` through the
@@ -260,11 +437,31 @@ class RateController:
         spec = comp.spec(flat.shape[0])
         return float(_rel_recon_err(spec, comp.codec_params(), flat))
 
+    def _lane_rung_err(self, ci: int, name: str, rung: int,
+                       seg: jax.Array) -> float:
+        """Per-partition variant of :meth:`_rung_err`: the group's own
+        payload segment through that lane's rung codec."""
+        comp = self._pcomps[ci][name][rung]
+        spec = comp.spec(seg.shape[0])
+        return float(_rel_recon_err(spec, comp.codec_params(), seg))
+
     def _eligible(self, run, r: int, participants: List[int], cooldown: int
                   ) -> List[int]:
         return [ci for ci in participants
                 if len(run.clients[ci].snapshots) >= self.min_snapshots
                 and r - self._last_switch[ci] >= cooldown]
+
+    def _eligible_lanes(self, run, r: int, participants: List[int],
+                        cooldown: int) -> List[Tuple[int, str]]:
+        """Movable (client, group) lanes: >1 rung, enough of the group's
+        own snapshots to judge (and refit onto), and off lane cooldown."""
+        return [
+            (ci, name)
+            for ci in participants for name in self.partition.names
+            if self._pnrungs[name] > 1
+            and len(run.clients[ci].part_snapshots.get(name, []))
+            >= self.min_snapshots
+            and r - self._plast[ci][name] >= cooldown]
 
     # ------------------------------------------------------------------
     # checkpointing (DESIGN.md §9.3): meta is JSON state, tree is the
@@ -272,16 +469,50 @@ class RateController:
     # rung must not be lost when the client has since stepped away)
     # ------------------------------------------------------------------
     def state_meta(self) -> Dict[str, Any]:
+        if self._partitioned:
+            return {"name": self.name, "partitioned": True,
+                    "rung": [dict(d) for d in self._prung],
+                    "last_switch": [dict(d) for d in self._plast]}
         return {"name": self.name, "rung": list(self._rung),
                 "last_switch": list(self._last_switch)}
 
     def state_tree(self) -> Pytree:
+        if self._partitioned:
+            return {"codecs": [
+                {name: [({"params": c.codec_params()}
+                         if c.codec_params() is not None else {})
+                        for c in rungs]
+                 for name, rungs in row.items()}
+                for row in self._pcomps]}
         return {"codecs": [
             [({"params": c.codec_params()}
               if c.codec_params() is not None else {}) for c in row]
             for row in self._comps]}
 
     def load_state(self, meta: Dict[str, Any], tree: Pytree) -> None:
+        if self._partitioned:
+            assert meta.get("partitioned"), (
+                "checkpoint holds a flat controller state but this run's "
+                "controller is per-partition — rebuild the run to match")
+            assert len(meta["rung"]) == len(self._pcomps)
+            self._prung = [{n: int(k) for n, k in d.items()}
+                           for d in meta["rung"]]
+            self._plast = [{n: int(k) for n, k in d.items()}
+                           for d in meta["last_switch"]]
+            for ci, row in enumerate(tree["codecs"]):
+                for name, rungs in row.items():
+                    for k, entry in enumerate(rungs):
+                        if entry.get("params") is not None:
+                            self._pcomps[ci][name][k].ae_compressor() \
+                                .params = entry["params"]
+                pc = partitioned(self.run.compressors[ci])
+                for name in self.partition.names:
+                    pc.compressors[name] = \
+                        self._pcomps[ci][name][self._prung[ci][name]]
+            return
+        assert not meta.get("partitioned"), (
+            "checkpoint holds a per-partition controller state but this "
+            "run's controller is flat — rebuild the run to match")
         assert len(meta["rung"]) == len(self._comps)
         self._rung = [int(x) for x in meta["rung"]]
         self._last_switch = [int(x) for x in meta["last_switch"]]
@@ -325,7 +556,25 @@ class DistortionTarget(RateController):
     cooldown: int = 1
     name: str = "distortion_target"
 
-    def plan(self, run, r: int, participants: List[int]) -> Dict[int, int]:
+    def plan(self, run, r: int, participants: List[int]) -> Dict:
+        if self._partitioned:
+            # same walk per (client, group) lane: each group's distortion
+            # is judged on its OWN payload segment, so a drifting conv
+            # stack steps up without dragging the head along
+            # (DESIGN.md §10.3)
+            moves: Dict[Tuple[int, str], int] = {}
+            for ci, name in self._eligible_lanes(run, r, participants,
+                                                 self.cooldown):
+                seg = run.clients[ci].part_snapshots[name][-1]
+                cur = self._prung[ci][name]
+                err = self._lane_rung_err(ci, name, cur, seg)
+                if err > self.target and cur + 1 < self._pnrungs[name]:
+                    moves[(ci, name)] = cur + 1
+                elif (cur > 0 and self._lane_rung_err(ci, name, cur - 1,
+                                                      seg)
+                        <= self.margin * self.target):
+                    moves[(ci, name)] = cur - 1
+            return moves
         moves: Dict[int, int] = {}
         for ci in self._eligible(run, r, participants, self.cooldown):
             flat = run.clients[ci].snapshots[-1]
@@ -358,7 +607,9 @@ class ByteBudget(RateController):
     cooldown: int = 0
     name: str = "byte_budget"
 
-    def plan(self, run, r: int, participants: List[int]) -> Dict[int, int]:
+    def plan(self, run, r: int, participants: List[int]) -> Dict:
+        if self._partitioned:
+            return self._plan_lanes(run, r, participants)
         parts = self._eligible(run, r, participants, self.cooldown)
         if not parts:
             return {}
@@ -389,3 +640,51 @@ class ByteBudget(RateController):
                     spent += delta
                     changed = True
         return {ci: k for ci, k in alloc.items() if k != self._rung[ci]}
+
+    def _plan_lanes(self, run, r: int, participants: List[int]) -> Dict:
+        """Per-partition greedy under the ONE shared budget: every
+        (client, group) lane competes for the same marginal bytes, so a
+        high-drift conv stack can out-bid every head lane in the cohort —
+        spending bits per layer where distortion hurts most
+        (DESIGN.md §10.3). Same shape as the flat plan: movable lanes
+        start at their group's cheapest rung, frozen lanes are priced at
+        their current rung, upgrade passes walk lanes in descending
+        drift."""
+        participants = sorted(set(participants))
+        lanes = self._eligible_lanes(run, r, participants, self.cooldown)
+        if not lanes:
+            return {}
+        all_lanes = [(ci, name) for ci in participants
+                     for name in self.partition.names]
+        lane_set = set(lanes)
+        frozen = [ln for ln in all_lanes if ln not in lane_set]
+        fixed_spend = sum(self._pcosts[name][self._prung[ci][name]]
+                          for ci, name in frozen)
+        score = {
+            (ci, name): self._lane_rung_err(
+                ci, name, self._prung[ci][name],
+                run.clients[ci].part_snapshots[name][-1])
+            for ci, name in lanes}
+        order = sorted(lanes, key=lambda ln: (-score[ln], ln))
+        alloc = {ln: 0 for ln in lanes}
+        spent = fixed_spend + sum(self._pcosts[name][0]
+                                  for _, name in lanes)
+        if spent > self.budget:      # budget below the all-cheapest floor
+            return {(ci, name): 0 for ci, name in lanes
+                    if self._prung[ci][name] != 0}
+        changed = True
+        while changed:
+            changed = False
+            for ln in order:
+                _, name = ln
+                nxt = alloc[ln] + 1
+                if nxt >= self._pnrungs[name]:
+                    continue
+                delta = self._pcosts[name][nxt] - \
+                    self._pcosts[name][alloc[ln]]
+                if spent + delta <= self.budget:
+                    alloc[ln] = nxt
+                    spent += delta
+                    changed = True
+        return {(ci, name): k for (ci, name), k in alloc.items()
+                if k != self._prung[ci][name]}

@@ -15,7 +15,7 @@ can be cross-checked against what a run actually shipped.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,7 +112,8 @@ def sweep_rounds(model: SavingsModel, collabs: int,
     return [model.savings_ratio(r, collabs) for r in rounds]
 
 
-def reconcile(model: SavingsModel, records: Sequence,
+def reconcile(model: Union[SavingsModel, Mapping[str, SavingsModel]],
+              records: Sequence,
               *, bytes_per_param: float = 4.0) -> Dict[str, float]:
     """Reconcile a run's observed accounting with Eq. 4–6 (DESIGN.md §8.3).
 
@@ -126,6 +127,17 @@ def reconcile(model: SavingsModel, records: Sequence,
     predicted savings ratio divides raw traffic by (raw / asymptotic-ratio
     + predicted cost), i.e. Eq. 4 with the model's CompressedSize.
 
+    Under per-layer codec partitions (DESIGN.md §10.4) ``model`` is a
+    ``{group_name: SavingsModel}`` mapping: each partition owns its own
+    decoder size and compression ratio, so the predicted Cost term sums
+    **per-partition decoder ships** — ``ae_syncs`` entries are
+    ``(client, group)`` pairs, counted against their own group's
+    DecoderSize — and predicted uplink apportions the observed raw bytes
+    by each group's OriginalSize share before dividing by that group's
+    ratio (exact whenever every participant ships every group, which every
+    scheduler does). A single-unit wire model under partitioning would
+    mis-price mixed ladders; this keeps the documented ≲1% structural gap.
+
     The small ``decoder_rel_err`` that remains is structural, not a bug:
     Eq. 6 idealizes DecoderSize as AutoencoderSize/2, while a funnel AE's
     decoder half differs from half by the bias asymmetry (output-width
@@ -134,9 +146,30 @@ def reconcile(model: SavingsModel, records: Sequence,
     up = float(sum(r.bytes_up for r in records))
     up_raw = float(sum(r.bytes_up_raw for r in records))
     dec_bytes = float(sum(getattr(r, "bytes_decoder", 0.0) for r in records))
-    syncs = sum(len(getattr(r, "ae_syncs", None) or []) for r in records)
-    predicted_dec = model.decoder_size * syncs * bytes_per_param
-    predicted_up = up_raw / model.asymptotic_ratio()
+    sync_list = [s for r in records
+                 for s in (getattr(r, "ae_syncs", None) or [])]
+    syncs = len(sync_list)
+    if isinstance(model, Mapping):
+        syncs_by_group: Dict[str, int] = {name: 0 for name in model}
+        for s in sync_list:
+            assert isinstance(s, (tuple, list)) and len(s) == 2, (
+                f"per-partition reconcile needs (client, group) sync "
+                f"entries, got {s!r} — pass a single SavingsModel for "
+                "flat runs")
+            syncs_by_group[s[1]] += 1
+        predicted_dec = sum(m.decoder_size * syncs_by_group[name]
+                            * bytes_per_param for name, m in model.items())
+        total_orig = float(sum(m.original_size for m in model.values()))
+        predicted_up = sum(
+            (up_raw * m.original_size / total_orig) / m.asymptotic_ratio()
+            for m in model.values())
+    else:
+        assert not any(isinstance(s, (tuple, list)) for s in sync_list), (
+            "partitioned run history ((client, group) sync entries) needs "
+            "a {group: SavingsModel} mapping — a single model would count "
+            "every per-group ship as a full-model decoder")
+        predicted_dec = model.decoder_size * syncs * bytes_per_param
+        predicted_up = up_raw / model.asymptotic_ratio()
     observed_sr = up_raw / (up + dec_bytes) if up + dec_bytes else float("inf")
     predicted_sr = (up_raw / (predicted_up + predicted_dec)
                     if predicted_up + predicted_dec else float("inf"))

@@ -72,7 +72,14 @@ class ClientState:
     ``ae_baseline`` is the post-refresh relative reconstruction error the
     drift trigger compares against. All of it persists through
     ``checkpoint.save_federated_state`` — residuals and snapshot buffers
-    are run state, not round state."""
+    are run state, not round state.
+
+    Under per-layer codec partitions (DESIGN.md §10) the lifecycle state
+    splits per group: ``part_snapshots[name]`` buffers the group's own
+    post-EF payload segment, and ``part_last_refresh``/``part_baseline``
+    track each group's decoder independently — a drifting conv stack can
+    refresh without re-shipping the head's decoder. The flat fields stay
+    untouched for non-partitioned clients (checkpoint compatibility)."""
 
     residual: Optional[Pytree] = None
     version: int = 0
@@ -80,6 +87,12 @@ class ClientState:
     snapshots: List[jax.Array] = dataclasses.field(default_factory=list)
     last_refresh: int = -1
     ae_baseline: Optional[float] = None
+    part_snapshots: Dict[str, List[jax.Array]] = \
+        dataclasses.field(default_factory=dict)
+    part_last_refresh: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    part_baseline: Dict[str, Optional[float]] = \
+        dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -199,7 +212,15 @@ def _server_aggregate(run, encoded: Sequence[EncodedUpdate],
     norm_w = jnp.asarray(norm_list, jnp.float32)
 
     spec0 = encoded[0].spec
-    if all(e.spec == spec0 for e in encoded):
+    if codec.is_partitioned(spec0):
+        # per-layer codec partitions (DESIGN.md §10.2): bucket the cohort
+        # per (partition group, codec spec) — exactly one fused
+        # decode→aggregate call per bucket, so heterogeneous cohorts ×
+        # heterogeneous layers still hit the fused path
+        from repro.core import partition
+        mean_flat = partition.server_decode_aggregate(
+            encoded, norm_list, base)
+    elif all(e.spec == spec0 for e in encoded):
         mean_flat = _fused_group(spec0, encoded, norm_w, base)
     else:                             # heterogeneous cohort: group by spec
         groups: Dict[codec.CodecSpec, List[int]] = {}

@@ -31,6 +31,13 @@ K=32-64 where this is ≪1 MB).
 Validated against the pure-jnp oracle ``ref.fused_decode_agg_ref`` (which
 materializes the per-client decoded tensors this kernel avoids) in
 interpret mode (DESIGN.md §7.3, tests/test_kernels.py).
+
+Under per-layer codec partitions (DESIGN.md §10.2) the grouped server path
+launches this kernel once per kernel-path chunked-AE (partition, spec)
+bucket per round — ``M`` is then the *group's* chunk count, not the whole
+model's, so the VMEM budget above holds per launch and shrinks with the
+partition; the weighted client reduction still commutes because each
+bucket's weights are renormalized to Σ=1 before dispatch.
 """
 from __future__ import annotations
 

@@ -1,0 +1,81 @@
+"""Golden-trajectory regression fixture: a small recorded seed-config run
+(per-round metrics + byte totals, committed at tests/golden/sync_q8.json)
+replayed against the live code, so silent numeric drift introduced by a
+future refactor fails loudly instead of slipping through relative-only
+equivalence tests (each of which compares two implementations of the SAME
+commit and so cannot see a drift both share).
+
+Byte totals are integer-exact (codec wire formats are deterministic).
+Metrics are floats crossing jit/XLA versions and platforms, so they get a
+small absolute+relative band rather than the in-process 1-ulp rule:
+atol=2e-5 / rtol=2e-4 is ~20× looser than observed same-machine jit
+variation (~1e-6) and ~100× tighter than any real numeric regression seen
+so far (lr changes, reduction reorderings move metrics at the 1e-2 level).
+
+Regenerate (only after an INTENTIONAL trajectory change, with the reason
+in the commit message):  PYTHONPATH=src python tests/test_golden_trajectory.py
+"""
+import json
+import os
+
+import numpy as np
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "sync_q8.json")
+
+
+def _run():
+    """The recorded configuration: the seed scheduler (SyncFedAvg), q8
+    codec, update payload + error feedback — deliberately the plainest
+    trajectory in the repo, so a drift here indicts core math, not policy."""
+    from repro.configs.paper import MNIST_CLASSIFIER
+    from repro.core import FLConfig, FederatedRun, QuantizeCompressor
+    from repro.data.pipeline import (mnist_like, train_eval_split,
+                                     uniform_partition)
+    train, ev = train_eval_split(mnist_like(0, 256), 64)
+    data = uniform_partition(0, train, 3)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update",
+                 error_feedback=True, seed=0),
+        compressors=[QuantizeCompressor(bits=8) for _ in range(3)],
+        eval_data=ev)
+    hist = run.run()
+    return [{
+        "round": r.round,
+        "bytes_up": r.bytes_up,
+        "bytes_up_raw": r.bytes_up_raw,
+        "bytes_down": r.bytes_down,
+        "bytes_decoder": r.bytes_decoder,
+        "compression_ratio": r.compression_ratio,
+        "loss": float(r.global_metrics["loss"]),
+        "accuracy": float(r.global_metrics["accuracy"]),
+    } for r in hist]
+
+
+def test_golden_trajectory_replays():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    live = _run()
+    assert len(live) == len(golden["rounds"])
+    for want, got in zip(golden["rounds"], live):
+        assert got["round"] == want["round"]
+        # byte accounting is exact: any change is a wire-format change
+        for k in ("bytes_up", "bytes_up_raw", "bytes_down",
+                  "bytes_decoder"):
+            assert got[k] == want[k], (k, got[k], want[k])
+        for k in ("compression_ratio", "loss", "accuracy"):
+            np.testing.assert_allclose(
+                got[k], want[k], atol=2e-5, rtol=2e-4,
+                err_msg=f"golden drift in {k!r} at round {got['round']} — "
+                        "if intentional, regenerate tests/golden/ (see "
+                        "module docstring)")
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w") as f:
+        json.dump({"config": "SyncFedAvg x3 clients, q8, update+EF, "
+                             "2 rounds, 1 epoch, mnist_like(0,256)/64",
+                   "rounds": _run()}, f, indent=1)
+    print(f"wrote {GOLDEN}")

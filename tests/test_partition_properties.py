@@ -1,0 +1,621 @@
+"""Per-layer codec partitions (DESIGN.md §10): partition-map invariants,
+encode→decode round trips, wire-byte pricing, identity-partition ≡ flat
+equivalence (unit + property-based via hypothesis, stub fallback), the
+grouped fused server path's call accounting, per-partition lifecycle
+decoder ships, per-partition savings reconciliation, and per-(client,
+partition) rate control."""
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:       # dev extra absent: property tests skip
+    from _hypothesis_stub import hypothesis, st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import MNIST_CLASSIFIER, AEConfig
+from repro.core import (AELifecycle, ByteBudget, ChunkedAECompressor,
+                        ChunkedAEConfig, ComposedCompressor,
+                        DistortionTarget, FCAECompressor, FLConfig,
+                        FederatedRun, IdentityCompressor,
+                        PartitionedCompressor, QuantizeCompressor,
+                        SampledSync, SavingsModel, SyncFedAvg,
+                        TopKCompressor, by_layer_partition,
+                        by_leaf_partition, codec, decoder_sync_bytes,
+                        identity_partition, init_chunked_ae, init_fc_ae,
+                        partition, partition_ladder, tree_bytes,
+                        wire_bytes, wire_bytes_by_group)
+from repro.core import autoencoder as ae
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+from repro.models.classifiers import init_classifier
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=15,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+TMPL = init_classifier(jax.random.PRNGKey(0), MNIST_CLASSIFIER)
+P = int(ravel_pytree(TMPL)[0].size)                       # 15910
+
+
+def _tree_close(a, b, **kw):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def _federation(n_clients, n=256, n_eval=64):
+    train, ev = train_eval_split(mnist_like(0, n), n_eval)
+    return uniform_partition(0, train, n_clients), ev
+
+
+def _compressor_for(kind: str, size: int, seed: int = 0):
+    """One sub-compressor per codec family, sized for a partition group —
+    the six-way zoo the partition layer must compose with."""
+    if kind == "identity":
+        return IdentityCompressor()
+    if kind == "q8":
+        return QuantizeCompressor(bits=8, block=64)
+    if kind == "q4":
+        return QuantizeCompressor(bits=4, block=64)
+    if kind == "topk":
+        return TopKCompressor(fraction=0.1)
+    if kind == "fc_ae":
+        cfg = AEConfig(input_dim=max(size, 8), encoder_hidden=(8,),
+                       latent_dim=4)
+        return FCAECompressor(init_fc_ae(jax.random.PRNGKey(seed), cfg),
+                              cfg)
+    if kind == "chunked_ae":
+        cfg = ChunkedAEConfig(chunk_size=32, hidden=(8,), latent_chunk=4)
+        return ChunkedAECompressor(init_chunked_ae(
+            jax.random.PRNGKey(seed), cfg), cfg, use_kernel=False)
+    if kind == "composed":
+        cfg = ChunkedAEConfig(chunk_size=32, hidden=(8,), latent_chunk=4)
+        return ComposedCompressor(ChunkedAECompressor(init_chunked_ae(
+            jax.random.PRNGKey(seed), cfg), cfg, use_kernel=False), bits=8)
+    raise ValueError(kind)
+
+
+ALL_KINDS = ("identity", "q8", "q4", "topk", "fc_ae", "chunked_ae",
+             "composed")
+
+
+# ----------------------------------------------------- map/spec invariants
+def test_partition_map_rejects_gaps_overlaps_and_duplicates():
+    with pytest.raises(AssertionError, match="gap/overlap"):
+        partition.PartitionMap(groups=(("a", ((0, 4),)), ("b", ((5, 3),))))
+    with pytest.raises(AssertionError, match="gap/overlap"):
+        partition.PartitionMap(groups=(("a", ((0, 4),)), ("b", ((2, 4),))))
+    with pytest.raises(AssertionError, match="duplicate"):
+        partition.PartitionMap(groups=(("a", ((0, 4),)), ("a", ((4, 4),))))
+
+
+def test_partition_spec_rejects_mis_sized_group_codec():
+    pm = partition.PartitionMap(groups=(("a", ((0, 8),)), ("b", ((8, 4),))))
+    with pytest.raises(AssertionError, match="sized"):
+        partition.make_partition_spec(
+            pm, {"a": codec.QuantizeSpec(size=7),
+                 "b": codec.QuantizeSpec(size=4)})
+
+
+def test_builders_tile_the_model_exactly():
+    for pm in (identity_partition(TMPL), by_leaf_partition(TMPL),
+               by_layer_partition(TMPL)):
+        assert pm.size == P
+        assert sum(pm.group_size(n) for n in pm.names) == P
+    assert by_layer_partition(TMPL).names == ("dense0", "dense1")
+
+
+def test_partition_spec_is_hashable_jit_static():
+    pm = by_layer_partition(TMPL)
+    spec = partition.make_partition_spec(
+        pm, {n: codec.QuantizeSpec(size=pm.group_size(n))
+             for n in pm.names})
+    assert hash(spec) == hash(spec)
+    flat = jax.random.normal(jax.random.PRNGKey(0), (P,))
+    out = jax.jit(lambda x: codec.decode(
+        spec, None, codec.encode(spec, None, x)))(flat)
+    assert out.shape == (P,) and out.dtype == flat.dtype
+
+
+# ------------------------------------------------- round trips and pricing
+@pytest.mark.parametrize("kinds", [
+    ("q8", "identity"), ("fc_ae", "q4"), ("chunked_ae", "topk"),
+    ("composed", "q8")])
+def test_mixed_partition_roundtrip_and_wire_bytes(kinds):
+    """Mixed per-layer specs: encode→decode preserves shape/dtype, and the
+    eval-shape price — per group and total — equals the real encode's
+    bytes (the single pricing rule, DESIGN.md §9.1/§10.3)."""
+    pm = by_layer_partition(TMPL)
+    comp = PartitionedCompressor(pm, {
+        name: _compressor_for(kind, pm.group_size(name), seed=i)
+        for i, (name, kind) in enumerate(zip(pm.names, kinds))})
+    flat = jax.random.normal(jax.random.PRNGKey(1), (P,)) * 0.1
+    spec = comp.spec(P)
+    params = comp.codec_params()
+    payload = codec.encode(spec, params, flat)
+    assert set(payload) == set(pm.names)
+    decoded = codec.decode(spec, params, payload)
+    assert decoded.shape == flat.shape and decoded.dtype == flat.dtype
+    by_group = wire_bytes_by_group(spec, params)
+    assert sum(by_group.values()) == wire_bytes(spec, params)
+    for name in pm.names:
+        assert by_group[name] == tree_bytes(payload[name])
+
+
+def test_identity_partition_decode_is_bitexact_flat():
+    """The compatibility partition: encode/decode through a single
+    all-leaves group must be bit-identical to the flat codec path for
+    every codec family."""
+    pm = identity_partition(TMPL)
+    flat = jax.random.normal(jax.random.PRNGKey(2), (P,)) * 0.1
+    for kind in ALL_KINDS:
+        sub = _compressor_for(kind, P)
+        pcomp = PartitionedCompressor(pm, {"all": sub})
+        d_part = codec.decode(pcomp.spec(P), pcomp.codec_params(),
+                              codec.encode(pcomp.spec(P),
+                                           pcomp.codec_params(), flat))
+        d_flat = codec.decode(sub.spec(P), sub.codec_params(),
+                              codec.encode(sub.spec(P), sub.codec_params(),
+                                           flat))
+        assert bool(jnp.all(d_part == d_flat)), kind
+
+
+def test_partitioned_decode_batched_matches_per_client():
+    pm = by_layer_partition(TMPL)
+    comp = PartitionedCompressor(pm, {"dense0": QuantizeCompressor(bits=8),
+                                      "dense1": IdentityCompressor()})
+    spec = comp.spec(P)
+    flats = [jax.random.normal(jax.random.PRNGKey(i), (P,)) for i in range(3)]
+    payloads = [codec.encode(spec, None, f) for f in flats]
+    rows = codec.decode_batched(spec, None, codec.stack_payloads(payloads))
+    want = jnp.stack([codec.decode(spec, None, pl) for pl in payloads])
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(want),
+                               atol=1e-6, rtol=1e-5)
+
+
+# ----------------------------------------------------------- property tests
+@hypothesis.given(st.data())
+def test_property_random_partition_roundtrip_invariants(data):
+    """Random pytrees × random partition maps × all six codec families:
+    encode→decode keeps shape/dtype, payload keys match group names, and
+    ``wire_bytes`` (total and per group) equals the real encode's bytes."""
+    n_leaves = data.draw(st.integers(1, 4), label="n_leaves")
+    shapes = [data.draw(st.sampled_from([(7,), (24,), (5, 9), (16, 4)]),
+                        label=f"shape{i}") for i in range(n_leaves)]
+    tree = {f"leaf{i}": jax.random.normal(jax.random.PRNGKey(i), s)
+            for i, s in enumerate(shapes)}
+    flat, _ = ravel_pytree(tree)
+    # random grouping: each leaf assigned a bucket label, buckets → groups
+    labels = [data.draw(st.integers(0, min(i, 2)), label=f"grp{i}")
+              for i in range(n_leaves)]
+    pm = partition.by_layer_partition(
+        tree, key_fn=lambda path: f"g{labels[int(path.split('/')[0][4:])]}")
+    kinds = {name: data.draw(st.sampled_from(ALL_KINDS),
+                             label=f"kind_{name}") for name in pm.names}
+    comp = PartitionedCompressor(pm, {
+        name: _compressor_for(kinds[name], pm.group_size(name))
+        for name in pm.names})
+    spec = comp.spec(pm.size)
+    params = comp.codec_params()
+    payload = codec.encode(spec, params, flat)
+    assert set(payload) == set(pm.names)
+    decoded = codec.decode(spec, params, payload)
+    assert decoded.shape == flat.shape and decoded.dtype == flat.dtype
+    by_group = wire_bytes_by_group(spec, params)
+    for name in pm.names:
+        assert by_group[name] == tree_bytes(payload[name])
+    assert wire_bytes(spec, params) == tree_bytes(payload)
+
+
+@hypothesis.given(st.integers(2, 60), st.sampled_from(ALL_KINDS),
+                  st.integers(0, 10 ** 6))
+def test_property_identity_partition_equals_flat(n, kind, seed):
+    """For ANY size and codec family, the identity partition's round trip
+    is bit-identical to the flat codec's."""
+    tree = {"w": jax.random.normal(
+        jax.random.PRNGKey(seed % 2 ** 31), (n,))}
+    flat, _ = ravel_pytree(tree)
+    pm = partition.identity_partition(tree)
+    sub = _compressor_for(kind, n, seed=seed % 97)
+    pcomp = PartitionedCompressor(pm, {"all": sub})
+    d_part = codec.decode(pcomp.spec(n), pcomp.codec_params(),
+                          codec.encode(pcomp.spec(n),
+                                       pcomp.codec_params(), flat))
+    d_flat = codec.decode(sub.spec(n), sub.codec_params(),
+                          codec.encode(sub.spec(n), sub.codec_params(),
+                                       flat))
+    assert bool(jnp.all(d_part == d_flat))
+
+
+@hypothesis.given(st.integers(2, 5), st.integers(0, 10 ** 6))
+def test_property_partitioned_fused_agg_equals_sequential(c, seed):
+    """Partitioned fused decode→aggregate over a random cohort equals the
+    sequential per-client decode + weighted mean (the repo's 1-ulp rule)."""
+    pm = by_layer_partition(TMPL)
+    spec = partition.make_partition_spec(
+        pm, {"dense0": codec.QuantizeSpec(size=pm.group_size("dense0")),
+             "dense1": codec.IdentitySpec(size=pm.group_size("dense1"))})
+    flats = [jax.random.normal(
+        jax.random.PRNGKey((seed + i) % 2 ** 31), (P,)) for i in range(c)]
+    payloads = [codec.encode(spec, None, f) for f in flats]
+    w = jnp.asarray([1.0 / c] * c, jnp.float32)
+    got = codec.decode_and_aggregate(spec, None,
+                                     codec.stack_payloads(payloads), w)
+    want = jnp.mean(jnp.stack([codec.decode(spec, None, pl)
+                               for pl in payloads]), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-5)
+
+
+# ------------------------------------- scheduler equivalence (acceptance)
+@pytest.mark.parametrize("make_sched", [
+    lambda: None,                                  # SyncFedAvg default
+    lambda: SampledSync(cohort=2),
+], ids=["sync", "sampled"])
+def test_identity_partition_run_matches_flat_run(make_sched):
+    """Acceptance: identity-partition runs reproduce today's flat
+    trajectories at the 1-ulp tolerance rule (records AND params), for the
+    sync schedulers. (AsyncBuffered is covered by the resume matrix — its
+    event loop is scheduler state, not codec state.)"""
+    data, ev = _federation(3)
+    cfg = FLConfig(n_rounds=2, local_epochs=1, payload="update",
+                   error_feedback=True)
+
+    def mk(partitioned_):
+        comps = []
+        for _ in range(3):
+            if partitioned_:
+                comps.append(PartitionedCompressor(
+                    identity_partition(TMPL),
+                    {"all": QuantizeCompressor(bits=8)}))
+            else:
+                comps.append(QuantizeCompressor(bits=8))
+        return FederatedRun(MNIST_CLASSIFIER, data, cfg, compressors=comps,
+                            eval_data=ev, scheduler=make_sched())
+
+    flat_run, part_run = mk(False), mk(True)
+    h_flat, h_part = flat_run.run(), part_run.run()
+    _tree_close(flat_run.global_params, part_run.global_params,
+                atol=1e-6, rtol=1e-5)
+    for a, b in zip(h_flat, h_part):
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_up_raw == b.bytes_up_raw
+        assert a.bytes_down == b.bytes_down
+        assert a.compression_ratio == pytest.approx(b.compression_ratio)
+        for k, v in a.global_metrics.items():
+            assert b.global_metrics[k] == pytest.approx(v, abs=1e-6)
+
+
+def test_async_identity_partition_run_matches_flat_run():
+    from repro.core import AsyncBuffered, LatencyModel
+    data, ev = _federation(3)
+    cfg = FLConfig(n_rounds=2, local_epochs=1, payload="update")
+
+    def mk(partitioned_):
+        comps = [(PartitionedCompressor(identity_partition(TMPL),
+                                        {"all": QuantizeCompressor(bits=8)})
+                  if partitioned_ else QuantizeCompressor(bits=8))
+                 for _ in range(3)]
+        return FederatedRun(
+            MNIST_CLASSIFIER, data, cfg, compressors=comps, eval_data=ev,
+            scheduler=AsyncBuffered(buffer_k=2,
+                                    latency=LatencyModel(jitter=0.3)))
+
+    flat_run, part_run = mk(False), mk(True)
+    h_flat, h_part = flat_run.run(), part_run.run()
+    _tree_close(flat_run.global_params, part_run.global_params,
+                atol=1e-6, rtol=1e-5)
+    for a, b in zip(h_flat, h_part):
+        assert a.bytes_up == b.bytes_up
+        assert a.participants == b.participants
+        assert a.staleness == b.staleness
+
+
+def test_two_partition_run_hits_fused_path_once_per_group(monkeypatch):
+    """Acceptance: a 2-partition MLP run takes the grouped fused server
+    path exactly once per (partition, spec) group per round — here clients
+    mix per-layer rungs so dense0 splits into {q8, q4} buckets and dense1
+    stays one {identity} bucket: 3 fused calls per round, never a
+    per-client decode."""
+    from repro.core import scheduler as sched_mod
+    data, ev = _federation(3)
+    pm = by_layer_partition(TMPL)
+
+    def mk(ci):
+        return PartitionedCompressor(pm, {
+            "dense0": QuantizeCompressor(bits=8 if ci < 2 else 4),
+            "dense1": IdentityCompressor()})
+
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        compressors=[mk(ci) for ci in range(3)], eval_data=ev)
+    calls = {"fused": 0, "decode": 0}
+    real_fused = codec.decode_and_aggregate
+    monkeypatch.setattr(
+        sched_mod.codec, "decode_and_aggregate",
+        lambda *a, **k: (calls.__setitem__("fused", calls["fused"] + 1),
+                         real_fused(*a, **k))[1])
+    real_decode = codec.decode
+    monkeypatch.setattr(
+        sched_mod.codec, "decode",
+        lambda *a, **k: (calls.__setitem__("decode", calls["decode"] + 1),
+                         real_decode(*a, **k))[1])
+    hist = run.run()
+    # (dense0, q8) + (dense0, q4) + (dense1, identity) = 3 per round
+    assert calls["fused"] == 3 * len(hist)
+    assert calls["decode"] == 0
+    assert all(np.isfinite(r.global_metrics["loss"]) for r in hist)
+
+
+def test_partitioned_heterogeneous_cohort_matches_sequential_oracle():
+    """Grouped fused dispatch ≡ sequential per-client decode + weighted
+    mean under mixed per-layer specs AND per-client AE params (the §9.2
+    contract, one level down)."""
+    from repro.core import scheduler as sched_mod
+    from repro.core.aggregate import apply_update, weighted_mean
+    from repro.core.scheduler import EncodedUpdate
+
+    data, ev = _federation(3)
+    run = FederatedRun(MNIST_CLASSIFIER, data,
+                       FLConfig(n_rounds=1, local_epochs=1,
+                                payload="weights"), eval_data=ev)
+    g_flat, unravel = ravel_pytree(run.global_params)
+    pm = by_layer_partition(TMPL)
+    d0 = pm.group_size("dense0")
+    ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(16,), latent_dim=8)
+    comps = [PartitionedCompressor(pm, {
+        "dense0": FCAECompressor(
+            init_fc_ae(jax.random.PRNGKey(10 + i), ae_cfg), ae_cfg),
+        "dense1": QuantizeCompressor(bits=8 if i else 4)})
+        for i in range(3)]
+    flats = [g_flat * (1.0 + 0.01 * (i + 1)) for i in range(3)]
+    weights = [10.0, 20.0, 30.0]
+    encoded = []
+    for comp, flat, w in zip(comps, flats, weights):
+        spec = comp.spec(P)
+        params = comp.codec_params()
+        encoded.append(EncodedUpdate(
+            payload=codec.encode(spec, params, flat), spec=spec,
+            params=params, weight=w, stats={}, metrics={}))
+    got = sched_mod._server_aggregate(run, encoded, weights)
+    rows = [codec.decode(e.spec, e.params, e.payload) - g_flat
+            for e in encoded]
+    mean = weighted_mean([unravel(r) for r in rows], weights)
+    want = apply_update(run.global_params, mean, run.cfg.server_lr)
+    _tree_close(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_partitioned_cohort_requires_shared_structure():
+    from repro.core import scheduler as sched_mod
+    from repro.core.scheduler import EncodedUpdate
+    data, ev = _federation(2)
+    run = FederatedRun(MNIST_CLASSIFIER, data,
+                       FLConfig(n_rounds=1, local_epochs=1,
+                                payload="update"), eval_data=ev)
+    flat = jnp.zeros((P,), jnp.float32)
+    mk = lambda pm: PartitionedCompressor(
+        pm, {n: IdentityCompressor() for n in pm.names})
+    encoded = []
+    for comp in (mk(by_layer_partition(TMPL)), mk(by_leaf_partition(TMPL))):
+        spec = comp.spec(P)
+        encoded.append(EncodedUpdate(
+            payload=codec.encode(spec, None, flat), spec=spec, params=None,
+            weight=1.0, stats={}, metrics={}))
+    with pytest.raises(AssertionError, match="partition structure"):
+        sched_mod._server_aggregate(run, encoded, [1.0, 1.0])
+
+
+# ------------------------------------ per-partition lifecycle + reconcile
+def test_partitioned_lifecycle_ships_and_refreshes_per_group():
+    """Each AE-backed group buffers its OWN payload segment, ships its own
+    initial decoder (ae_syncs carries (client, group) lanes), and
+    refreshes on its own cadence without dragging other groups along."""
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    d0 = pm.group_size("dense0")
+    ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(16,), latent_dim=8)
+
+    def mk(ci):
+        return PartitionedCompressor(pm, {
+            "dense0": FCAECompressor(
+                init_fc_ae(jax.random.PRNGKey(ci), ae_cfg), ae_cfg),
+            "dense1": QuantizeCompressor(bits=8)})
+
+    comps = [mk(ci) for ci in range(2)]
+    before = [jax.tree_util.tree_map(
+        jnp.copy, comps[ci].compressors["dense0"].params)
+        for ci in range(2)]
+    lc = AELifecycle(refresh_every=2, min_snapshots=1, refresh_epochs=2,
+                     batch_size=2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=3, local_epochs=1, payload="weights"),
+        compressors=comps, eval_data=ev, lifecycle=lc)
+    hist = run.run()
+    per = decoder_sync_bytes(comps[0].compressors["dense0"].params)
+    assert hist[0].ae_syncs == [(0, "dense0"), (1, "dense0")]
+    assert hist[0].bytes_decoder == pytest.approx(2 * per)
+    # cadence 2: refreshed in round 2, only the AE group re-ships
+    assert hist[2].ae_syncs == [(0, "dense0"), (1, "dense0")]
+    for ci in range(2):
+        st = run.clients[ci]
+        assert set(st.part_snapshots) == {"dense0"}
+        assert st.part_snapshots["dense0"][-1].shape == (d0,)
+        assert st.part_last_refresh["dense0"] == 2
+        assert st.part_baseline["dense0"] is not None
+        moved = any(
+            not np.allclose(np.asarray(x), np.asarray(y))
+            for x, y in zip(
+                jax.tree_util.tree_leaves(
+                    comps[ci].compressors["dense0"].params["dec"]),
+                jax.tree_util.tree_leaves(before[ci]["dec"])))
+        assert moved, "per-group refit did not move the group's params"
+
+
+def test_partitioned_savings_reconcile_sums_per_group_ships():
+    """Satellite fix: reconcile under partitioning counts each group's
+    ships against its OWN DecoderSize and apportions raw uplink by
+    OriginalSize share — gap within the documented structural bound."""
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    d0, d1 = pm.group_size("dense0"), pm.group_size("dense1")
+    ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(64,), latent_dim=16)
+
+    def mk(ci):
+        return PartitionedCompressor(pm, {
+            "dense0": FCAECompressor(
+                init_fc_ae(jax.random.PRNGKey(ci), ae_cfg), ae_cfg),
+            "dense1": IdentityCompressor()})
+
+    lc = AELifecycle(min_snapshots=1)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="weights"),
+        compressors=[mk(ci) for ci in range(2)], eval_data=ev,
+        lifecycle=lc)
+    hist = run.run()
+    syncs = [s for r in hist for s in (r.ae_syncs or [])]
+    assert syncs == [(0, "dense0"), (1, "dense0")]
+    models = {
+        "dense0": SavingsModel(original_size=d0,
+                               compressed_size=ae_cfg.latent_dim,
+                               autoencoder_size=ae_cfg.n_params,
+                               n_decoders=2),
+        "dense1": SavingsModel(original_size=d1, compressed_size=d1,
+                               autoencoder_size=0, n_decoders=0)}
+    report = run.savings_report(models)
+    assert report["decoder_syncs"] == 2.0
+    assert report["decoder_rel_err"] < 0.01       # hidden=64: <1% gap
+    assert report["savings_rel_err"] < 0.01
+
+
+def test_flat_reconcile_rejects_lane_syncs_mismatch():
+    """A per-partition model mapping demands (client, group) sync entries;
+    feeding it a flat run's int entries must fail loudly, not mis-count —
+    and vice versa: a single SavingsModel on a partitioned history would
+    count every per-group ship as a full-model decoder."""
+    from repro.core.savings import reconcile
+    models = {"all": SavingsModel(original_size=100, compressed_size=10,
+                                  autoencoder_size=40, n_decoders=2)}
+    flat_rec = type("R", (), {"bytes_up": 10.0, "bytes_up_raw": 100.0,
+                              "bytes_decoder": 4.0, "ae_syncs": [0, 1]})()
+    with pytest.raises(AssertionError, match="client, group"):
+        reconcile(models, [flat_rec])
+    part_rec = type("R", (), {"bytes_up": 10.0, "bytes_up_raw": 100.0,
+                              "bytes_decoder": 4.0,
+                              "ae_syncs": [(0, "a"), (1, "a")]})()
+    with pytest.raises(AssertionError, match="SavingsModel"):
+        reconcile(models["all"], [part_rec])
+
+
+# ------------------------------------------ per-(client, partition) ladders
+def _pointwise_rungs(pm):
+    return {name: [lambda ci, n: QuantizeCompressor(bits=4),
+                   lambda ci, n: QuantizeCompressor(bits=8),
+                   lambda ci, n: IdentityCompressor()]
+            for name in pm.names}
+
+
+def test_partition_ladder_walks_lanes_independently():
+    """DistortionTarget over per-partition ladders: each (client, group)
+    lane walks on its own segment's distortion — switch records carry the
+    lane, and next-round uplink reflects the per-group rungs."""
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    rc = DistortionTarget(ladder=partition_ladder(2, pm,
+                                                  _pointwise_rungs(pm)),
+                          partition=pm, target=1e-12, margin=1e-3,
+                          min_snapshots=1, cooldown=1)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    hist = run.run()
+    # target 1e-12 is below every rung's error: every lane steps up once
+    assert sorted(hist[0].spec_switches) == [
+        ((0, "dense0"), 0, 1), ((0, "dense1"), 0, 1),
+        ((1, "dense0"), 0, 1), ((1, "dense1"), 0, 1)]
+    # round 1 walks every lane one more rung (q8 is still over target)
+    assert all(rc.rung_of_group(ci, n) == 2
+               for ci in range(2) for n in pm.names)
+    assert hist[1].bytes_up > hist[0].bytes_up
+    # pointwise rungs ship no decoders
+    assert all(r.bytes_decoder == 0.0 for r in hist)
+
+
+def test_partition_byte_budget_shares_one_budget_across_lanes():
+    """ByteBudget over lanes: with an unbounded budget every lane tops
+    out; with a budget below the all-cheapest floor every lane pins to
+    rung 0 — the budget is one pool, not per-group."""
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    rc = ByteBudget(ladder=partition_ladder(2, pm, _pointwise_rungs(pm)),
+                    partition=pm, budget=float("inf"), min_snapshots=1)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    run.run()
+    assert all(rc.rung_of_group(ci, n) == 2
+               for ci in range(2) for n in pm.names)
+    floor = sum(rc.wire_cost_group(n, 0) for n in pm.names) * 2
+    rc2 = ByteBudget(ladder=partition_ladder(2, pm, _pointwise_rungs(pm)),
+                     partition=pm, budget=floor - 1, min_snapshots=1)
+    run2 = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc2)
+    run2.run()
+    assert all(rc2.rung_of_group(ci, n) == 0
+               for ci in range(2) for n in pm.names)
+
+
+def test_partition_ladder_ae_switch_refits_group_and_ships_decoder():
+    """A lane switching onto an AE rung refits THAT group's AE on the
+    group's snapshot ring and ships only that group's decoder."""
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    d0 = pm.group_size("dense0")
+    ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(16,), latent_dim=8)
+    rungs = {
+        "dense0": [lambda ci, n: FCAECompressor(
+                       init_fc_ae(jax.random.PRNGKey(40 + ci), ae_cfg),
+                       ae_cfg),
+                   lambda ci, n: IdentityCompressor()],
+        "dense1": [lambda ci, n: QuantizeCompressor(bits=8)]}
+    rc = DistortionTarget(ladder=partition_ladder(2, pm, rungs),
+                          partition=pm, target=1e30, margin=2.0,
+                          min_snapshots=1, cooldown=1, initial_rung=1,
+                          refit_epochs=2, refit_batch=2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="weights"),
+        eval_data=ev, ratecontrol=rc)
+    hist = run.run()
+    # huge target + margin: dense0 lanes step DOWN onto the AE rung
+    assert sorted(hist[0].spec_switches) == [
+        ((0, "dense0"), 1, 0), ((1, "dense0"), 1, 0)]
+    assert sorted(hist[0].ae_syncs) == [(0, "dense0"), (1, "dense0")]
+    assert hist[0].bytes_decoder > 0
+    for ci in range(2):
+        assert rc.rung_of_group(ci, "dense0") == 0
+        assert rc.rung_of_group(ci, "dense1") == 0
+        assert run.clients[ci].part_last_refresh["dense0"] == 0
+
+
+def test_partition_ladder_requires_matching_groups():
+    data, ev = _federation(2)
+    pm = by_layer_partition(TMPL)
+    bad = partition_ladder(2, pm, _pointwise_rungs(pm))
+    del bad[1]["dense1"]
+    with pytest.raises(AssertionError, match="ladder groups"):
+        FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=1, local_epochs=1, payload="update"),
+            eval_data=ev,
+            ratecontrol=DistortionTarget(ladder=bad, partition=pm))

@@ -1,0 +1,128 @@
+"""Differential resume-equivalence matrix (DESIGN.md §10.4): one grid over
+{SyncFedAvg, SampledSync, AsyncBuffered} × {no controller, DistortionTarget,
+ByteBudget} × {flat, partitioned} asserting that saving mid-run and
+resuming reproduces the uninterrupted run in BYTES and TRAJECTORY — final
+params bit-exact, per-round byte accounting and metrics equal. This one
+test collapses the per-feature resume checks into a single grid and closes
+the previously-untested cells (e.g. controllers × async, anything ×
+partitioned)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import MNIST_CLASSIFIER
+from repro.core import (AsyncBuffered, ByteBudget, DistortionTarget,
+                        FLConfig, FederatedRun, IdentityCompressor,
+                        LatencyModel, PartitionedCompressor,
+                        QuantizeCompressor, SampledSync,
+                        by_layer_partition, partition_ladder)
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+from repro.models.classifiers import init_classifier
+
+N_CLIENTS = 3
+TMPL = init_classifier(jax.random.PRNGKey(0), MNIST_CLASSIFIER)
+PM = by_layer_partition(TMPL)
+
+
+def _data():
+    train, ev = train_eval_split(mnist_like(0, 128), 32)
+    return uniform_partition(0, train, N_CLIENTS), ev
+
+
+def _scheduler(kind):
+    return {
+        "sync": lambda: None,                       # SyncFedAvg default
+        "sampled": lambda: SampledSync(cohort=2),
+        "async": lambda: AsyncBuffered(
+            buffer_k=2, latency=LatencyModel(jitter=0.3)),
+    }[kind]()
+
+
+def _flat_ladder():
+    return [[QuantizeCompressor(bits=4), QuantizeCompressor(bits=8),
+             IdentityCompressor()] for _ in range(N_CLIENTS)]
+
+
+def _part_ladder():
+    rungs = {name: [lambda ci, n: QuantizeCompressor(bits=4),
+                    lambda ci, n: QuantizeCompressor(bits=8),
+                    lambda ci, n: IdentityCompressor()]
+             for name in PM.names}
+    return partition_ladder(N_CLIENTS, PM, rungs)
+
+
+def _controller(kind, layout):
+    if kind == "none":
+        return None
+    ladder = _part_ladder() if layout == "partitioned" else _flat_ladder()
+    pm = PM if layout == "partitioned" else None
+    if kind == "distortion":
+        # target between observed q4 and q8 segment errors so some lanes
+        # genuinely move mid-grid (switch state must survive the resume)
+        return DistortionTarget(ladder=ladder, partition=pm, target=5e-9,
+                                margin=1e-3, min_snapshots=1, cooldown=1)
+    assert kind == "bytebudget"
+    return ByteBudget(ladder=ladder, partition=pm, budget=float("inf"),
+                      min_snapshots=1)
+
+
+def _compressors(layout):
+    if layout == "partitioned":
+        # mixed per-layer pointwise specs: exercises the grouped fused
+        # path and the partitioned payload/codec state across the resume
+        return [PartitionedCompressor(PM, {
+            "dense0": QuantizeCompressor(bits=8),
+            "dense1": IdentityCompressor()}) for _ in range(N_CLIENTS)]
+    return [QuantizeCompressor(bits=8) for _ in range(N_CLIENTS)]
+
+
+def _mk(sched, rc, layout, n_rounds, data, ev):
+    cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update",
+                   error_feedback=(rc == "none"))
+    controller = _controller(rc, layout)
+    return FederatedRun(
+        MNIST_CLASSIFIER, data, cfg,
+        compressors=(None if controller is not None
+                     else _compressors(layout)),
+        eval_data=ev, scheduler=_scheduler(sched), ratecontrol=controller)
+
+
+@pytest.mark.parametrize("layout", ["flat", "partitioned"])
+@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
+@pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
+def test_resume_matrix_bytes_and_trajectory(sched, rc, layout, tmp_path):
+    data, ev = _data()
+    full = _mk(sched, rc, layout, 2, data, ev)
+    hist_full = full.run()
+
+    first = _mk(sched, rc, layout, 1, data, ev)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+
+    resumed = _mk(sched, rc, layout, 1, data, ev)
+    assert resumed.load_state(path) == 1
+    hist_resumed = resumed.run()
+
+    # trajectory: final params bit-exact
+    for x, y in zip(jax.tree_util.tree_leaves(full.global_params),
+                    jax.tree_util.tree_leaves(resumed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # bytes + records: resumed round 2 ≡ uninterrupted round 2
+    for a, b in zip(hist_full[1:], hist_resumed):
+        assert a.round == b.round
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_up_raw == b.bytes_up_raw
+        assert a.bytes_down == b.bytes_down
+        assert a.bytes_decoder == b.bytes_decoder
+        assert a.ae_syncs == b.ae_syncs
+        assert a.participants == b.participants
+        assert a.spec_switches == b.spec_switches
+        assert a.staleness == b.staleness
+        assert a.sim_time == b.sim_time
+        assert a.global_metrics == b.global_metrics
