@@ -1,0 +1,162 @@
+"""Perf regression gate over the persisted benchmark trajectory.
+
+Diffs the ``BENCH_<table>.json`` artifacts a fresh ``benchmarks.run --json``
+produced against the committed baselines in ``benchmarks/baselines/`` and
+exits 1 when any row slowed down by more than ``--threshold`` (default 20%)
+**after machine rescaling** (DESIGN.md §11.3).
+
+Rescaling: CI runners and the baseline machine differ in raw speed, so a
+uniform shift of every row is machine noise, not a regression. With ≥4
+matched rows the per-row ratios are divided by their median before the
+threshold test — a real regression moves one kernel's row against its
+table-mates, a slow runner moves them all together. Small tables (<4 rows)
+skip rescaling (a median over 2–3 rows would absorb the very regression it
+should expose) and compare raw ratios.
+
+Missing baselines are tolerated with a warning (new tables land before
+their first committed baseline); rows with ``us_per_call <= 0`` (ERROR /
+info-only rows) are skipped on either side.
+
+Sub-resolution rows: a row must also slow down by more than
+``--min-delta-us`` (default 150µs) in rescaled absolute terms. Timer
+resolution on a shared host is tens of µs, so a 400µs row can cross +20%
+on pure jitter; a *real* regression on such a fast row that matters will
+clear the floor easily (2× of 400µs is a 400µs delta). The floor never
+masks rows slow enough for 20% to be measurable.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_THRESHOLD = 0.20
+DEFAULT_MIN_DELTA_US = 150.0
+MIN_ROWS_FOR_RESCALE = 4
+
+
+def load_artifact(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc.get("schema") == 1, f"{path}: unknown schema {doc.get('schema')}"
+    return doc
+
+
+def _timed_rows(doc: Dict) -> Dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])
+            if float(r["us_per_call"]) > 0.0}
+
+
+def compare(baseline: Dict, current: Dict, *,
+            threshold: float = DEFAULT_THRESHOLD,
+            rescale: bool = True,
+            min_delta_us: float = DEFAULT_MIN_DELTA_US,
+            ) -> Tuple[List[str], List[str]]:
+    """Compare one table's artifacts → (regressions, notes). A regression
+    line names the row, the baseline/current µs, and the (rescaled) ratio;
+    notes cover skipped rows and the rescale factor applied."""
+    base_rows = _timed_rows(baseline)
+    cur_rows = _timed_rows(current)
+    matched = sorted(set(base_rows) & set(cur_rows))
+    notes: List[str] = []
+    only_base = sorted(set(base_rows) - set(cur_rows))
+    only_cur = sorted(set(cur_rows) - set(base_rows))
+    if only_base:
+        notes.append(f"rows only in baseline (skipped): {only_base}")
+    if only_cur:
+        notes.append(f"rows only in current (skipped): {only_cur}")
+    if not matched:
+        notes.append("no matched timed rows — nothing compared")
+        return [], notes
+    ratios = {n: cur_rows[n] / base_rows[n] for n in matched}
+    scale = 1.0
+    if rescale and len(matched) >= MIN_ROWS_FOR_RESCALE:
+        ordered = sorted(ratios.values())
+        mid = len(ordered) // 2
+        scale = (ordered[mid] if len(ordered) % 2
+                 else 0.5 * (ordered[mid - 1] + ordered[mid]))
+        notes.append(f"machine rescale factor (median ratio): {scale:.3f}")
+    regressions = []
+    for n in matched:
+        rel = ratios[n] / scale
+        delta = cur_rows[n] / scale - base_rows[n]
+        if rel > 1.0 + threshold and delta > min_delta_us:
+            regressions.append(
+                f"{current['name']}/{n}: {base_rows[n]:.1f}us -> "
+                f"{cur_rows[n]:.1f}us ({rel:.2f}x rescaled, "
+                f"threshold {1.0 + threshold:.2f}x)")
+    return regressions, notes
+
+
+def check_dirs(baseline_dir: str, current_dir: str, *,
+               threshold: float = DEFAULT_THRESHOLD,
+               rescale: bool = True,
+               min_delta_us: float = DEFAULT_MIN_DELTA_US,
+               out=sys.stdout) -> int:
+    """Walk every BENCH_*.json in ``current_dir`` against its baseline.
+    Returns the total regression count (the process exit code)."""
+    cur_paths = sorted(glob.glob(os.path.join(current_dir, "BENCH_*.json")))
+    if not cur_paths:
+        print(f"WARNING: no BENCH_*.json artifacts in {current_dir}",
+              file=out)
+        return 0
+    total = 0
+    for cur_path in cur_paths:
+        fname = os.path.basename(cur_path)
+        base_path = os.path.join(baseline_dir, fname)
+        current = load_artifact(cur_path)
+        if current.get("error"):
+            print(f"WARNING: {fname}: current run errored "
+                  f"({current['error']}) — not compared", file=out)
+            continue
+        if not os.path.exists(base_path):
+            print(f"WARNING: no baseline for {fname} in {baseline_dir} — "
+                  "tolerated (commit one to start gating it)", file=out)
+            continue
+        baseline = load_artifact(base_path)
+        regs, notes = compare(baseline, current, threshold=threshold,
+                              rescale=rescale, min_delta_us=min_delta_us)
+        for note in notes:
+            print(f"  [{fname}] {note}", file=out)
+        for reg in regs:
+            print(f"REGRESSION: {reg}", file=out)
+        if not regs:
+            print(f"OK: {fname} ({len(_timed_rows(current))} timed rows)",
+                  file=out)
+        total += len(regs)
+    return total
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "baselines"),
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--current", required=True,
+                    help="directory of freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative slowdown that fails the gate "
+                         "(0.20 = +20%%)")
+    ap.add_argument("--no-rescale", action="store_true",
+                    help="disable median machine rescaling")
+    ap.add_argument("--min-delta-us", type=float,
+                    default=DEFAULT_MIN_DELTA_US,
+                    help="absolute rescaled slowdown a row must also exceed "
+                         "(guards sub-resolution rows against timer jitter)")
+    args = ap.parse_args(argv)
+    n = check_dirs(args.baseline, args.current, threshold=args.threshold,
+                   rescale=not args.no_rescale,
+                   min_delta_us=args.min_delta_us)
+    if n:
+        print(f"{n} benchmark regression(s) beyond "
+              f"+{args.threshold * 100:.0f}%")
+        raise SystemExit(1)
+    print("benchmark trajectory: no regressions")
+
+
+if __name__ == "__main__":
+    main()

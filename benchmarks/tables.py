@@ -637,23 +637,42 @@ def table_fl_partition() -> List[Row]:
     call per group inlined into one jitted dispatch); ``part2_mixed`` is a
     heterogeneous cohort (half the clients on q8, half on q4 for the bulk
     group) through ``partition.server_decode_aggregate`` — one fused call
-    per (partition, spec) bucket. Partitioning costs the extra per-group
-    dispatches + the scatter epilogue; this table keeps that overhead
-    honest next to ``fl_decode_agg``."""
+    per (partition, spec) bucket, and ``part2_mixed_grouped`` the same
+    cohort through the one-dispatch grouped round (DESIGN.md §11.2).
+    ``partae_mixed[_grouped]`` swaps the bulk group to two kernel-path
+    chunked-AE rungs (a rate-control ladder shape): sequential = one Pallas
+    launch per AE bucket; grouped = all AE buckets in ONE grouped ragged
+    launch. Partitioning costs the extra per-group dispatches + the scatter
+    epilogue; this table keeps that overhead honest next to
+    ``fl_decode_agg``."""
     from repro.core import codec, normalize_weights, partition
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
     from repro.core.scheduler import EncodedUpdate
 
     model = (1 << 20) if FULL else (1 << 15)
     head = model // 16
+    bulk = model - head
     pmap = partition.PartitionMap(groups=(
-        ("bulk", ((0, model - head),)), ("head", ((model - head, head),))))
+        ("bulk", ((0, bulk),)), ("head", ((model - head, head),))))
     rows: List[Row] = []
     flat_spec = codec.QuantizeSpec(size=model)
     part_spec = partition.make_partition_spec(pmap, {
-        "bulk": codec.QuantizeSpec(size=model - head),
+        "bulk": codec.QuantizeSpec(size=bulk),
         "head": codec.QuantizeSpec(size=head)})
     spec_q4_bulk = partition.make_partition_spec(pmap, {
-        "bulk": codec.QuantizeSpec(size=model - head, bits=4),
+        "bulk": codec.QuantizeSpec(size=bulk, bits=4),
+        "head": codec.QuantizeSpec(size=head)})
+    # two kernel-path AE rungs for the bulk group — a per-partition
+    # rate-control ladder in miniature (latent 8 vs 4 per 256-chunk)
+    cfg_hi = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
+    cfg_lo = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=4)
+    prm_hi = init_chunked_ae(jax.random.PRNGKey(7), cfg_hi)
+    prm_lo = init_chunked_ae(jax.random.PRNGKey(8), cfg_lo)
+    spec_ae_hi = partition.make_partition_spec(pmap, {
+        "bulk": codec.ChunkedAESpec(size=bulk, cfg=cfg_hi, use_kernel=True),
+        "head": codec.QuantizeSpec(size=head)})
+    spec_ae_lo = partition.make_partition_spec(pmap, {
+        "bulk": codec.ChunkedAESpec(size=bulk, cfg=cfg_lo, use_kernel=True),
         "head": codec.QuantizeSpec(size=head)})
     for cohort in (8, 64):
         flats = [jax.random.normal(jax.random.PRNGKey(i), (model,))
@@ -671,6 +690,13 @@ def table_fl_partition() -> List[Row]:
                 spec=(part_spec if i % 2 else spec_q4_bulk), params=None,
                 weight=weights[i], stats={}, metrics={})
             for i, f in enumerate(flats)]
+        ae_mixed = []
+        for i, f in enumerate(flats):
+            sp = spec_ae_hi if i % 2 else spec_ae_lo
+            prm = {"bulk": prm_hi if i % 2 else prm_lo, "head": None}
+            ae_mixed.append(EncodedUpdate(
+                payload=codec.encode(sp, prm, f), spec=sp, params=prm,
+                weight=weights[i], stats={}, metrics={}))
 
         def flat_path():
             return jax.block_until_ready(
@@ -686,9 +712,26 @@ def table_fl_partition() -> List[Row]:
             return jax.block_until_ready(
                 partition.server_decode_aggregate(mixed, weights, None))
 
+        def part_mixed_grouped():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(
+                    mixed, weights, None, use_grouped_kernel=True))
+
+        def partae_mixed():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(ae_mixed, weights, None))
+
+        def partae_mixed_grouped():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(
+                    ae_mixed, weights, None, use_grouped_kernel=True))
+
         t_flat = _timeit_min(flat_path)
         t_part = _timeit_min(part_path)
         t_mix = _timeit_min(part_mixed)
+        t_mix_g = _timeit_min(part_mixed_grouped)
+        t_ae = _timeit_min(partae_mixed)
+        t_ae_g = _timeit_min(partae_mixed_grouped)
         rows += [
             (f"decode_agg_flat_c{cohort}", t_flat, "single spec"),
             (f"decode_agg_part2_c{cohort}", t_part,
@@ -697,8 +740,41 @@ def table_fl_partition() -> List[Row]:
             (f"decode_agg_part2_mixed_c{cohort}", t_mix,
              f"overhead={t_mix / max(t_flat, 1e-9):.2f}x vs flat "
              "(3 (partition, spec) buckets)"),
+            (f"decode_agg_part2_mixed_grouped_c{cohort}", t_mix_g,
+             f"overhead={t_mix_g / max(t_flat, 1e-9):.2f}x vs flat "
+             "(grouped: 1 dispatch)"),
+            (f"decode_agg_partae_mixed_c{cohort}", t_ae,
+             "2 AE rungs + q8 head, sequential buckets"),
+            (f"decode_agg_partae_mixed_grouped_c{cohort}", t_ae_g,
+             f"speedup={t_ae / max(t_ae_g, 1e-9):.2f}x vs sequential "
+             "(1 grouped ragged launch for both AE buckets)"),
         ]
     return rows
+
+
+# =====================================================================
+# analytic rooflines attached to the BENCH_*.json artifacts
+# (benchmarks/run.py --json; repro.roofline.analysis, DESIGN.md §11.3)
+# =====================================================================
+def _roofline_fl_decode_agg() -> dict:
+    model = (1 << 20) if FULL else (1 << 15)
+    from repro.roofline.analysis import decode_agg_roofline
+    return decode_agg_roofline(cohort=64, n_chunks=model // 256, latent=8,
+                               hidden=(32,), chunk=256, n_buckets=1)
+
+
+def _roofline_fl_partition() -> dict:
+    model = (1 << 20) if FULL else (1 << 15)
+    bulk = model - model // 16
+    from repro.roofline.analysis import decode_agg_roofline
+    return decode_agg_roofline(cohort=64, n_chunks=bulk // 256, latent=8,
+                               hidden=(32,), chunk=256, n_buckets=2)
+
+
+ROOFLINES = {
+    "fl_decode_agg": _roofline_fl_decode_agg,
+    "fl_partition": _roofline_fl_partition,
+}
 
 
 ALL_TABLES = [

@@ -372,28 +372,39 @@ def decode_and_aggregate(spec: CodecSpec, params: Optional[Params],
     return jnp.einsum("c,cp->p", w, rows.astype(jnp.float32))
 
 
-def _fused_chunked_decode_agg(spec: ChunkedAESpec, params: Params,
-                              z: jax.Array, weights: jax.Array) -> jax.Array:
-    """ChunkedAE fused path: per-client work stays latent-sided (the hidden
-    stack output ``(C, n_chunks, hidden)``); the chunk_size-wide expansion
-    happens inside the weighted-accumulation kernel, once."""
+def chunked_hidden(spec: ChunkedAESpec, params: Params,
+                   z: jax.Array) -> jax.Array:
+    """Kernel-path hidden decoder stack: ``(C, n_chunks, latent)`` latents →
+    ``(C, n_chunks, K)`` penultimate activations, everything latent-sided.
+    Shared by the per-bucket fused path below and the grouped ragged launch
+    (core/partition.py, DESIGN.md §11.2) — both then expand to chunk width
+    inside a weighted-accumulation kernel."""
     from repro.kernels.fused_dense import fused_dense
-    from repro.kernels.fused_decode_agg import fused_decode_agg
     from repro.kernels.ops import interpret_default
     interp = interpret_default()
     C, nc, latent = z.shape
-    dec = params["dec"]
     x = z.reshape(C * nc, latent)
-    for layer in dec[:-1]:                     # hidden stack, act throughout
+    for layer in params["dec"][:-1]:           # hidden stack, act throughout
         # large bm: the folded (C·n_chunks) batch is tall and the hidden
         # widths narrow, so row-fat tiles stay far under VMEM while cutting
         # the grid-step count (which is what interpret-mode costs scale on)
         x = fused_dense(x, layer["w"], layer["b"],
                         act=spec.cfg.activation, bm=512, interpret=interp)
-    h = x.reshape(C, nc, x.shape[-1])
+    return x.reshape(C, nc, x.shape[-1])
+
+
+def _fused_chunked_decode_agg(spec: ChunkedAESpec, params: Params,
+                              z: jax.Array, weights: jax.Array) -> jax.Array:
+    """ChunkedAE fused path: per-client work stays latent-sided (the hidden
+    stack output ``(C, n_chunks, hidden)``); the chunk_size-wide expansion
+    happens inside the weighted-accumulation kernel, once."""
+    from repro.kernels.fused_decode_agg import fused_decode_agg
+    from repro.kernels.ops import interpret_default
+    dec = params["dec"]
+    h = chunked_hidden(spec, params, z)
     chunks = fused_decode_agg(h, weights, dec[-1]["w"], dec[-1]["b"],
-                              interpret=interp)       # (nc, chunk_size)
-    norm = params["norm"]
+                              interpret=interpret_default())
+    norm = params["norm"]                             # (nc, chunk_size)
     chunks = chunks * norm["std"] + norm["mean"]      # Σw=1 ⇒ mean denorm
     return chunks.reshape(-1)[:spec.size]
 

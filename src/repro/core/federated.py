@@ -50,6 +50,12 @@ class FLConfig:
     # pre-pass weights dataset see in-distribution inputs. "update" ships
     # deltas instead (the right target for quantize/top-k codecs).
     payload: str = "weights"           # weights | update
+    # server aggregation dispatch: None defers to ops.use_grouped_default
+    # (REPRO_GROUPED_KERNEL env var, else the per-bucket sequential path);
+    # True stages each heterogeneous round into ONE jitted dispatch whose
+    # kernel-path AE buckets share a single grouped ragged Pallas launch
+    # (DESIGN.md §11.2)
+    use_grouped_kernel: Optional[bool] = None
     seed: int = 0
 
 

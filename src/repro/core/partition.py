@@ -42,6 +42,7 @@ array pytrees, so they stack along a client axis like any other payload.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -296,7 +297,9 @@ def wire_bytes_by_group(spec: PartitionSpec,
 # the grouped fused server path: one fused call per (partition, spec) group
 # =====================================================================
 def server_decode_aggregate(encoded: Sequence, norm_weights: List[float],
-                            base: Optional[jax.Array]) -> jax.Array:
+                            base: Optional[jax.Array], *,
+                            use_grouped_kernel: Optional[bool] = None
+                            ) -> jax.Array:
     """Fused decode→aggregate for a partitioned cohort: for each partition
     group, bucket the cohort by that group's codec spec and issue exactly
     one ``codec.decode_and_aggregate`` per (partition, spec) bucket —
@@ -311,7 +314,16 @@ def server_decode_aggregate(encoded: Sequence, norm_weights: List[float],
     to Σ=1 (``decode_and_aggregate``'s contract; the kernel-path chunked AE
     denorms and subtracts ``base`` on that assumption) and scales its mean
     back by the bucket's weight mass, exactly as the flat heterogeneous
-    path does (DESIGN.md §9.2)."""
+    path does (DESIGN.md §9.2).
+
+    ``use_grouped_kernel`` (default: ``ops.use_grouped_default`` — env var
+    ``REPRO_GROUPED_KERNEL``, else off) routes the whole round through ONE
+    jitted dispatch instead of one per bucket: pointwise/batched-params
+    buckets inline their fused reductions, and every kernel-path chunked-AE
+    bucket joins a single grouped ragged Pallas launch
+    (``kernels.fused_decode_agg.grouped_fused_decode_agg``, DESIGN.md
+    §11.2). The per-bucket sequential loop below stays the differential
+    oracle (tests/test_grouped_kernel.py)."""
     spec0: PartitionSpec = encoded[0].spec
     structure = spec0.structure
     for e in encoded:
@@ -319,6 +331,21 @@ def server_decode_aggregate(encoded: Sequence, norm_weights: List[float],
             e.spec.structure == structure, (
                 "partitioned cohorts must share one partition structure "
                 "(groups/slices); per-group codec specs may differ")
+    from repro.kernels.ops import use_grouped_default
+    if use_grouped_default(use_grouped_kernel):
+        groups_host = []
+        for gi, (name, slices) in enumerate(structure):
+            buckets: Dict[codec.CodecSpec, List[int]] = {}
+            for i, e in enumerate(encoded):
+                buckets.setdefault(e.spec.groups[gi][2], []).append(i)
+            groups_host.append((name, slices, [
+                (cspec, idx,
+                 [encoded[i].payload[name] for i in idx],
+                 [None if encoded[i].params is None
+                  else encoded[i].params.get(name) for i in idx])
+                for cspec, idx in buckets.items()]))
+        return _grouped_server_round(groups_host, list(norm_weights), base,
+                                     spec0.size)
     norm_w = jnp.asarray(norm_weights, jnp.float32)
     group_means: Dict[str, jax.Array] = {}
     for gi, (name, slices) in enumerate(structure):
@@ -352,3 +379,146 @@ def server_decode_aggregate(encoded: Sequence, norm_weights: List[float],
             mean_g = contrib if mean_g is None else mean_g + contrib
         group_means[name] = mean_g
     return scatter_groups(structure, group_means, spec0.size)
+
+
+# =====================================================================
+# grouped one-dispatch round (DESIGN.md §11.2): the whole heterogeneous
+# cohort — every (partition, spec) bucket — staged into ONE jitted call,
+# with all kernel-path chunked-AE buckets sharing ONE grouped ragged
+# Pallas launch per (hidden, chunk) signature.
+# =====================================================================
+def grouped_flat_server_aggregate(encoded: Sequence,
+                                  norm_weights: List[float],
+                                  base: Optional[jax.Array]) -> jax.Array:
+    """Flat (non-partitioned) heterogeneous cohort — e.g. rate-control
+    ladder rungs — as one pseudo-group covering the whole vector, routed
+    through the same one-dispatch grouped round as the partitioned path.
+    Numerically matches the scheduler's sequential group-by-spec loop:
+    identical per-bucket renormalization (host floats) and identical
+    per-bucket kernel math (the grouped launch's zero-weight padding adds
+    exact zeros, DESIGN.md §11.1)."""
+    size = encoded[0].spec.size
+    buckets: Dict[codec.CodecSpec, List[int]] = {}
+    for i, e in enumerate(encoded):
+        buckets.setdefault(e.spec, []).append(i)
+    groups_host = [("all", ((0, size),), [
+        (cspec, idx,
+         [encoded[i].payload for i in idx],
+         [encoded[i].params for i in idx])
+        for cspec, idx in buckets.items()])]
+    return _grouped_server_round(groups_host, list(norm_weights), base, size)
+
+
+def _grouped_server_round(groups_host, norm_weights: List[float],
+                          base: Optional[jax.Array], size: int) -> jax.Array:
+    """Host-side builder for :func:`_grouped_round`: split every bucket into
+    its static half (spec, params-batched?, decoder slot, single-bucket?) —
+    the jit cache key — and its dynamic half (stacked payloads, params,
+    renormalized weights, weight masses). Client *index lists* stay dynamic
+    (weights are materialized as arrays here), so round-to-round cohort
+    reshuffles at fixed bucket shapes do NOT retrace.
+
+    ``groups_host[g] = (name, slices, [(cspec, idx, payload_list,
+    params_list), ...])``. Decoder slots are assigned in first-seen bucket
+    order (not by object id), so a stable bucket ordering yields a stable
+    plan even when AE params are refreshed between rounds."""
+    norm_w = jnp.asarray(norm_weights, jnp.float32)
+    plan, payloads, params_all, wlists, sgs = [], [], [], [], []
+    dec_slots: Dict[int, int] = {}
+    for name, slices, buckets in groups_host:
+        single = len(buckets) == 1
+        bplan, pays, prms, ws, sgl = [], [], [], [], []
+        for cspec, idx, pay_list, prm_list in buckets:
+            stacked = codec.stack_payloads(pay_list)
+            if all(p is prm_list[0] for p in prm_list):
+                prm, pb = prm_list[0], False
+            else:
+                prm = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *prm_list)
+                pb = True
+            if single:
+                w_b, s_g = norm_w, 1.0       # bit-stable homogeneous path
+            else:
+                s_g = sum(norm_weights[i] for i in idx)   # host float
+                w_b = jnp.asarray([norm_weights[i] / s_g for i in idx],
+                                  jnp.float32)
+            slot = None
+            if (isinstance(cspec, codec.ChunkedAESpec) and cspec.use_kernel
+                    and not pb):
+                slot = dec_slots.setdefault(id(prm), len(dec_slots))
+            bplan.append((cspec, pb, slot, single))
+            pays.append(stacked)
+            prms.append(prm)
+            ws.append(w_b)
+            sgl.append(s_g)
+        plan.append((name, slices, tuple(bplan)))
+        payloads.append(tuple(pays))
+        params_all.append(tuple(prms))
+        wlists.append(tuple(ws))
+        sgs.append(tuple(sgl))
+    return _grouped_round(tuple(plan), size, tuple(payloads),
+                          tuple(params_all), tuple(wlists), tuple(sgs), base)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "size"))
+def _grouped_round(plan, size, payloads, params, wlists, sgs,
+                   base: Optional[jax.Array]) -> jax.Array:
+    """ONE jitted dispatch for the whole round. Pointwise / batched-params
+    buckets inline ``codec.decode_and_aggregate`` (nested jit inlines into
+    this trace); kernel-path chunked-AE buckets compute their latent-sided
+    hidden activations and then share one grouped ragged Pallas launch per
+    ``(hidden_width, chunk_size)`` signature — the final expansion +
+    weighted reduction for every AE bucket of every group in one kernel
+    sweep (DESIGN.md §11.1–§11.2). Decoder stacks are deduped by slot, so
+    buckets sharing one decoder ship its weights to the launch once."""
+    from repro.kernels.fused_decode_agg import grouped_fused_decode_agg
+    from repro.kernels.ops import interpret_default
+
+    group_means: Dict[str, jax.Array] = {}
+
+    def _add(name, contrib):
+        prev = group_means.get(name)
+        group_means[name] = contrib if prev is None else prev + contrib
+
+    jobs: Dict[Tuple[int, int], List[dict]] = {}
+    for (name, slices, bplan), pays, prms, ws, sgl in zip(
+            plan, payloads, params, wlists, sgs):
+        base_g = None if base is None else gather(slices, base)
+        for (cspec, pb, slot, single), pay, prm, w_b, s_g in zip(
+                bplan, pays, prms, ws, sgl):
+            if slot is not None:
+                h = codec.chunked_hidden(cspec, prm, pay["z"])
+                jobs.setdefault((h.shape[-1], cspec.cfg.chunk_size),
+                                []).append(dict(
+                    h=h, w=w_b, slot=slot, dec=prm["dec"][-1],
+                    norm=prm["norm"], spec=cspec, sg=s_g, single=single,
+                    base_g=base_g, name=name))
+                continue
+            mean_b = codec.decode_and_aggregate(cspec, prm, pay, w_b,
+                                                base_g, params_batched=pb)
+            _add(name, mean_b if single
+                 else jnp.asarray(s_g, jnp.float32) * mean_b)
+    for (_K, _N), js in jobs.items():
+        slots = sorted({j["slot"] for j in js})
+        remap = {s: i for i, s in enumerate(slots)}
+        by_slot = {}
+        for j in js:
+            by_slot.setdefault(j["slot"], j)
+        w_stack = jnp.stack([by_slot[s]["dec"]["w"] for s in slots])
+        b_stack = jnp.stack([by_slot[s]["dec"]["b"] for s in slots])
+        outs = grouped_fused_decode_agg(
+            [j["h"] for j in js], [j["w"] for j in js], w_stack, b_stack,
+            [remap[j["slot"]] for j in js], interpret=interpret_default())
+        for j, chunks in zip(js, outs):
+            # Σw=1 per bucket ⇒ the weighted sum of normalized chunks
+            # denorms like a single reconstruction (same math as the
+            # per-bucket path in codec._fused_chunked_decode_agg)
+            norm = j["norm"]
+            flat_b = (chunks * norm["std"] + norm["mean"]
+                      ).reshape(-1)[:j["spec"].size]
+            if j["base_g"] is not None:
+                flat_b = flat_b - j["base_g"]
+            _add(j["name"], flat_b if j["single"]
+                 else jnp.asarray(j["sg"], jnp.float32) * flat_b)
+    structure = tuple((n, sl) for n, sl, _ in plan)
+    return scatter_groups(structure, group_means, size)

@@ -211,17 +211,27 @@ def _server_aggregate(run, encoded: Sequence[EncodedUpdate],
     norm_list = normalize_weights(weights)
     norm_w = jnp.asarray(norm_list, jnp.float32)
 
+    from repro.kernels import ops
+    grouped = ops.use_grouped_default(getattr(cfg, "use_grouped_kernel",
+                                              None))
     spec0 = encoded[0].spec
     if codec.is_partitioned(spec0):
         # per-layer codec partitions (DESIGN.md §10.2): bucket the cohort
         # per (partition group, codec spec) — exactly one fused
-        # decode→aggregate call per bucket, so heterogeneous cohorts ×
-        # heterogeneous layers still hit the fused path
+        # decode→aggregate call per bucket (or, with the grouped kernel
+        # flag, one dispatch for the whole round, DESIGN.md §11.2)
         from repro.core import partition
         mean_flat = partition.server_decode_aggregate(
-            encoded, norm_list, base)
+            encoded, norm_list, base, use_grouped_kernel=grouped)
     elif all(e.spec == spec0 for e in encoded):
         mean_flat = _fused_group(spec0, encoded, norm_w, base)
+    elif grouped:
+        # heterogeneous flat cohort, one dispatch: every rung bucket —
+        # kernel-path AE rungs via the single grouped ragged Pallas
+        # launch — inlined into one jitted round (DESIGN.md §11.2)
+        from repro.core import partition
+        mean_flat = partition.grouped_flat_server_aggregate(
+            encoded, norm_list, base)
     else:                             # heterogeneous cohort: group by spec
         groups: Dict[codec.CodecSpec, List[int]] = {}
         for i, e in enumerate(encoded):

@@ -42,10 +42,12 @@ bucket's weights are renormalized to Σ=1 before dispatch.
 from __future__ import annotations
 
 import functools
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _fused_decode_agg_kernel(w_ref, h_ref, wl_ref, b_ref, o_ref):
@@ -110,3 +112,135 @@ def fused_decode_agg(h: jax.Array, weights: jax.Array, w_last: jax.Array,
         interpret=interpret,
     )(w2, h, w_last, bp)
     return out[:M]
+
+
+# =====================================================================
+# grouped ragged launch: one kernel sweep over every bucket of a round
+# =====================================================================
+def _grouped_decode_agg_kernel(desc_ref, w_ref, h_ref, wl_ref, b_ref,
+                               o_ref):
+    """Per grid step ``(t, cb)``: tile ``t`` is one (bucket, m-tile) pair
+    resolved through the prefetched descriptor table; ``cb`` walks the
+    bucket's client blocks (zero-weight padded up to the cohort-wide
+    maximum). Same reduce-before-expand body as the per-bucket kernel."""
+    del desc_ref                             # consumed by the index maps
+    cb = pl.program_id(1)
+    w = w_ref[...].astype(jnp.float32)       # (1, bc) this bucket's weights
+    h = h_ref[...].astype(jnp.float32)       # (bc, bm, K)
+    hbar = jnp.sum(h * w[0, :, None, None], axis=0)
+    y = jnp.dot(hbar, wl_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(cb == 0)
+    def _init():
+        o_ref[...] = (y + b_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+    @pl.when(cb > 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + y).astype(o_ref.dtype)
+
+
+def grouped_fused_decode_agg(hs: Sequence[jax.Array],
+                             weights: Sequence[jax.Array],
+                             w_stack: jax.Array, b_stack: jax.Array,
+                             dec_idx: Sequence[int], *, bm: int = 128,
+                             bc: int = 16,
+                             interpret: bool = False) -> List[jax.Array]:
+    """One Pallas launch over every (partition, spec) bucket of a round:
+    per bucket ``b``, ``Σ_c weights[b][c] · (hs[b][c] @ w_stack[dec_idx[b]])
+    + b_stack[dec_idx[b]]`` — the ragged cohort packed into a single grid.
+
+    hs[b]: (C_b, M_b, K) per-client penultimate decoder activations — the
+    client count C_b AND the chunk-row count M_b are ragged across buckets;
+    every bucket must share the hidden width ``K`` and the chunk width ``N``
+    (the grouped server path groups launches by that (K, N) signature).
+    weights[b]: (C_b,) this bucket's FedAvg weights (the caller owns the
+    Σ-normalization contract, exactly as for :func:`fused_decode_agg` — the
+    bias is added once per output tile). w_stack: (D, K, N) distinct final
+    decoder layers, b_stack: (D, N); ``dec_idx[b]`` picks bucket ``b``'s
+    decoder, so buckets sharing a decoder share one stacked copy.
+
+    Descriptor layout (DESIGN.md §11.1): a ``(3, T)`` int32 table with one
+    column per (bucket, m-tile) grid tile — row 0 the bucket id (selects
+    the weight row), row 1 the packed output row-block (selects the h
+    column band and the output tile), row 2 the decoder index. The table
+    rides the scalar-prefetch operand of a ``PrefetchScalarGridSpec``, so
+    the index maps resolve every block address from SMEM before the DMA
+    fires — raggedness costs descriptor lookups, not extra launches.
+
+    Packing: client axis padded to the cohort-wide max block count (zero
+    weight ⇒ exact zero contribution), each bucket's rows padded to a
+    ``bm`` multiple and laid end-to-end. A bucket with zero clients
+    contributes nothing to the grid and returns exact zeros (its weight
+    mass is zero, so the caller's scale-back drops it anyway).
+
+    Returns the per-bucket ``(M_b, N)`` reconstructions (unpacked views of
+    the one packed output). Not jit-wrapped: callers trace it inside the
+    round's single jitted dispatch (core/partition.py, DESIGN.md §11.2).
+    """
+    assert len(hs) == len(weights) == len(dec_idx)
+    D, K, N = w_stack.shape
+    assert b_stack.shape == (D, N)
+    live = [b for b, h in enumerate(hs) if h.shape[0] > 0]
+    if not live:
+        return [jnp.zeros((h.shape[1], N), jnp.float32) for h in hs]
+    for b in live:
+        C_b, M_b, K_b = hs[b].shape
+        assert K_b == K, (
+            f"bucket {b}: hidden width {K_b} != {K} — grouped launches "
+            f"require one (K, N) signature; split the launch")
+        assert weights[b].shape == (C_b,) and M_b > 0
+        assert 0 <= dec_idx[b] < D
+    bm = min(bm, max(8, max(hs[b].shape[1] for b in live)))
+    bc = min(bc, max(hs[b].shape[0] for b in live))
+    Cp = max(-(-hs[b].shape[0] // bc) * bc for b in live)
+
+    # pack: clients → shared padded axis, rows → bm-padded bands, and the
+    # (bucket, row-block, decoder) descriptor column per grid tile
+    h_bands, w_rows, offsets = [], [], {}
+    bucket_of, row_of, dec_of = [], [], []
+    pos = 0
+    for b in live:
+        C_b, M_b, _ = hs[b].shape
+        Mp_b = -(-M_b // bm) * bm
+        h_bands.append(jnp.pad(hs[b], ((0, Cp - C_b), (0, Mp_b - M_b),
+                                       (0, 0))))
+        w_rows.append(jnp.pad(weights[b].astype(jnp.float32),
+                              (0, Cp - C_b)))
+        offsets[b] = pos
+        for i in range(Mp_b // bm):
+            bucket_of.append(len(w_rows) - 1)   # row in the packed weights
+            row_of.append(pos // bm + i)
+            dec_of.append(dec_idx[b])
+        pos += Mp_b
+    h_packed = jnp.concatenate(h_bands, axis=1)        # (Cp, Mtot, K)
+    w_packed = jnp.stack(w_rows)                       # (B_live, Cp)
+    desc = jnp.asarray([bucket_of, row_of, dec_of], jnp.int32)
+    T = len(bucket_of)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, Cp // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda t, cb, d: (d[0, t], cb)),
+            pl.BlockSpec((bc, bm, K), lambda t, cb, d: (cb, d[1, t], 0)),
+            pl.BlockSpec((1, K, N), lambda t, cb, d: (d[2, t], 0, 0)),
+            pl.BlockSpec((1, 1, N), lambda t, cb, d: (d[2, t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda t, cb, d: (d[1, t], 0)),
+    )
+    out = pl.pallas_call(
+        _grouped_decode_agg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((pos, N), jnp.float32),
+        interpret=interpret,
+    )(desc, w_packed, h_packed, w_stack, b_stack.reshape(D, 1, N))
+
+    results: List[jax.Array] = []
+    for b, h in enumerate(hs):
+        if h.shape[0] == 0:
+            results.append(jnp.zeros((h.shape[1], N), jnp.float32))
+        else:
+            off = offsets[b]
+            results.append(out[off:off + h.shape[1]])
+    return results

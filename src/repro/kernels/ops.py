@@ -51,6 +51,22 @@ def use_kernel_default(override: Optional[bool] = None) -> bool:
     return jax.default_backend() == "tpu"
 
 
+def use_grouped_default(override: Optional[bool] = None) -> bool:
+    """Resolve the grouped one-dispatch server path (DESIGN.md §11.2):
+    explicit ``override`` (``FLConfig.use_grouped_kernel`` or a direct
+    ``server_decode_aggregate`` argument) > ``REPRO_GROUPED_KERNEL`` env
+    var > off. Off by default on purpose — the per-bucket sequential path
+    is the differential oracle the grouped launch is validated against
+    (tests/test_grouped_kernel.py), so it stays the default until a run
+    opts in."""
+    if override is not None:
+        return bool(override)
+    env = os.environ.get("REPRO_GROUPED_KERNEL")
+    if env is not None and env != "":
+        return env not in ("0", "false", "False")
+    return False
+
+
 # ---------------------------------------------------------------- quantize
 def quantize_blocks(flat: jax.Array, *, bits: int = 8,
                     block: int = 256) -> Tuple[jax.Array, jax.Array, int]:

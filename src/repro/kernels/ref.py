@@ -49,3 +49,17 @@ def fused_decode_agg_ref(h: jax.Array, weights: jax.Array,
     per_client = h.astype(jnp.float32) @ w_last.astype(jnp.float32)
     return (jnp.einsum("c,cmn->mn", weights.astype(jnp.float32), per_client)
             + b_last.astype(jnp.float32))
+
+
+def grouped_fused_decode_agg_ref(hs, weights, w_stack, b_stack, dec_idx):
+    """Oracle for the grouped ragged launch: one materialize-then-reduce
+    pass per bucket, in bucket order. Empty buckets (zero clients) return
+    exact zeros — their weight mass is zero, matching the kernel."""
+    N = w_stack.shape[2]
+    out = []
+    for h, w, d in zip(hs, weights, dec_idx):
+        if h.shape[0] == 0:
+            out.append(jnp.zeros((h.shape[1], N), jnp.float32))
+        else:
+            out.append(fused_decode_agg_ref(h, w, w_stack[d], b_stack[d]))
+    return out

@@ -276,3 +276,91 @@ def model_flops(cfg, shape) -> float:
         return 2.0 * n_act * tokens + attn
     # decode: one token per sequence
     return 2.0 * n_act * shape.global_batch + attn
+
+
+# =====================================================================
+# analytic decode→aggregate roofline (DESIGN.md §11.3): where the four
+# server-aggregation variants sit against the HBM roof, from shapes alone
+# =====================================================================
+def decode_agg_roofline(cohort: int, n_chunks: int, latent: int,
+                        hidden: Tuple[int, ...], chunk: int, *,
+                        n_buckets: int = 1,
+                        dtype_bytes: int = 4) -> Dict[str, Dict]:
+    """Place the chunked-AE decode→aggregate variants on the memory roofline.
+
+    Every variant runs the same decoder math — ``cohort`` clients ×
+    ``n_chunks`` chunks through ``latent → hidden... → chunk`` per bucket,
+    ``n_buckets`` buckets per round — so FLOPs are identical; what differs
+    is HBM traffic and launch count:
+
+    * ``loop``    — per-client sequential decode + host reduce: every client
+      materializes its full reconstruction to HBM and it is read back for
+      the reduction; decoder params are re-read per client. C·B launches.
+    * ``vmap``    — batched decode per bucket: params read once per bucket,
+      but the (C, model) reconstruction block still round-trips HBM before
+      the einsum. B launches.
+    * ``fused``   — the per-bucket Pallas kernel (DESIGN.md §7.1): hidden
+      activations round-trip at latent width, the chunk-wide expansion is
+      reduced in-kernel, only the (model)-sized mean is written. B launches.
+    * ``grouped`` — the ragged grouped launch (DESIGN.md §11.1): same
+      traffic as ``fused`` minus repeated decoder-stack reads (each distinct
+      decoder ships once into the stacked operand), in ONE launch.
+
+    Returns per-variant dicts with ``flops``, ``hbm_bytes``,
+    ``arith_intensity`` (FLOPs/byte), ``pct_of_roof`` (attainable FLOP/s at
+    that intensity over peak), ``bound`` and ``launches``, plus the machine
+    constants used — all finite for any positive shapes
+    (tests/test_roofline_decode_agg.py)."""
+    assert cohort > 0 and n_chunks > 0 and latent > 0 and chunk > 0
+    assert n_buckets > 0 and dtype_bytes > 0
+    widths = (latent,) + tuple(hidden) + (chunk,)
+    K = widths[-2]                                  # penultimate width
+    # identical compute for every variant: 2mnk per layer matmul, per
+    # (client, chunk) row, per bucket
+    flops_per_row = sum(2.0 * a * b for a, b in zip(widths[:-1], widths[1:]))
+    flops = n_buckets * cohort * n_chunks * flops_per_row
+    param_bytes = sum((a * b + b) * dtype_bytes
+                      for a, b in zip(widths[:-1], widths[1:]))
+    z_bytes = n_buckets * cohort * n_chunks * latent * dtype_bytes
+    model_bytes = n_buckets * n_chunks * chunk * dtype_bytes   # one mean
+    recon_bytes = cohort * model_bytes          # C materialized decodes
+    hidden_rt = n_buckets * cohort * n_chunks * K * dtype_bytes
+    ridge = PEAK_FLOPS_BF16 / HBM_BW
+
+    def variant(hbm_bytes: float, launches: int) -> Dict[str, float]:
+        ai = flops / hbm_bytes
+        attainable = min(PEAK_FLOPS_BF16, ai * HBM_BW)
+        return {
+            "flops": flops,
+            "hbm_bytes": hbm_bytes,
+            "arith_intensity": ai,
+            "pct_of_roof": 100.0 * attainable / PEAK_FLOPS_BF16,
+            "bound": "memory" if ai < ridge else "compute",
+            "launches": launches,
+        }
+
+    return {
+        "shape": {"cohort": cohort, "n_chunks": n_chunks, "latent": latent,
+                  "hidden": list(hidden), "chunk": chunk,
+                  "n_buckets": n_buckets},
+        "machine": {"hbm_bw": HBM_BW, "peak_flops": PEAK_FLOPS_BF16,
+                    "ridge_intensity": ridge},
+        "loop": variant(
+            z_bytes + n_buckets * cohort * param_bytes    # params per client
+            + 2.0 * recon_bytes                           # write + read back
+            + model_bytes,                                # mean write
+            launches=cohort * n_buckets),
+        "vmap": variant(
+            z_bytes + n_buckets * param_bytes
+            + 2.0 * recon_bytes + model_bytes,
+            launches=n_buckets),
+        "fused": variant(
+            z_bytes + n_buckets * param_bytes
+            + 2.0 * hidden_rt                             # latent-sided only
+            + model_bytes,
+            launches=n_buckets),
+        "grouped": variant(
+            z_bytes + param_bytes                         # deduped decoders
+            + 2.0 * hidden_rt + model_bytes,
+            launches=1),
+    }

@@ -1,0 +1,253 @@
+"""Benchmark-trajectory artifacts and the regression gate (DESIGN.md §11.3):
+BENCH_*.json schema, CSV/JSON row agreement, the ERROR-row-before-partial-rows
+contract for generator tables, check_regression threshold/rescale/missing-
+baseline behavior, and validity of the committed baselines (including the
+grouped-kernel acceptance number they carry)."""
+import io
+import json
+import os
+import re
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:       # benchmarks/ is a namespace package
+    sys.path.insert(0, REPO_ROOT)
+
+from benchmarks import check_regression, run as bench_run  # noqa: E402
+
+BASELINE_DIR = os.path.join(REPO_ROOT, "benchmarks", "baselines")
+
+
+def _fake_tables(monkeypatch, tables):
+    import benchmarks.tables as tables_mod
+    monkeypatch.setattr(tables_mod, "ALL_TABLES", tables)
+    monkeypatch.setattr(tables_mod, "ROOFLINES", {}, raising=False)
+
+
+# --------------------------------------------------------- run.py --json
+def test_json_and_csv_agree_row_for_row(tmp_path, monkeypatch, capsys):
+    rows = [("alpha", 12.34, "d1"), ("beta", 56.78, "d2")]
+    _fake_tables(monkeypatch, [("fake", lambda: rows)])
+    bench_run.main(["--tables", "fake", "--json", str(tmp_path)])
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out[0] == "name,us_per_call,derived"
+    csv_rows = [line.split(",", 2) for line in out[1:]]
+    doc = json.load(open(tmp_path / "BENCH_fake.json"))
+    assert doc["schema"] == 1
+    assert doc["name"] == "fake"
+    assert isinstance(doc["git_rev"], str) and doc["git_rev"]
+    assert isinstance(doc["backend"], str) and doc["backend"]
+    assert len(doc["rows"]) == len(csv_rows) == len(rows)
+    for jrow, crow, orig in zip(doc["rows"], csv_rows, rows):
+        assert jrow["name"] == crow[0] == orig[0]
+        assert jrow["us_per_call"] == orig[1]        # full precision in JSON
+        assert float(crow[1]) == pytest.approx(orig[1], abs=0.05)
+        assert jrow["derived"] == crow[2] == orig[2]
+
+
+def test_generator_table_error_emits_error_row_not_partial_rows(
+        tmp_path, monkeypatch, capsys):
+    """A table implemented as a generator that raises mid-iteration must
+    produce the single ERROR row — not a partial prefix of clean-looking
+    rows followed by a crash (the old harness iterated outside the try)."""
+    def gen_table():
+        yield ("first", 1.0, "ok")
+        raise RuntimeError("boom mid-table")
+
+    _fake_tables(monkeypatch, [("gen", gen_table)])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--tables", "gen", "--json", str(tmp_path)])
+    assert exc.value.code == 1
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out[0] == "name,us_per_call,derived"
+    assert len(out) == 2                       # ERROR row only, no partials
+    assert out[1].startswith("gen,0,ERROR:") and "boom mid-table" in out[1]
+    doc = json.load(open(tmp_path / "BENCH_gen.json"))
+    assert doc["rows"] == [] and "boom mid-table" in doc["error"]
+
+
+def test_error_table_exit_code_and_other_tables_still_run(
+        monkeypatch, capsys):
+    _fake_tables(monkeypatch, [
+        ("bad", lambda: (_ for _ in ()).throw(ValueError("nope"))),
+        ("good", lambda: [("row", 1.0, "fine")])])
+    with pytest.raises(SystemExit):
+        bench_run.main(["--tables", "all"])
+    out = capsys.readouterr().out
+    assert "bad,0,ERROR:" in out and "row,1.0,fine" in out
+
+
+def test_artifact_includes_registered_roofline(tmp_path, monkeypatch):
+    import benchmarks.tables as tables_mod
+    monkeypatch.setattr(tables_mod, "ALL_TABLES",
+                        [("fake", lambda: [("r", 1.0, "d")])])
+    monkeypatch.setattr(tables_mod, "ROOFLINES",
+                        {"fake": lambda: {"grouped": {"launches": 1}}},
+                        raising=False)
+    bench_run.main(["--tables", "fake", "--json", str(tmp_path)])
+    doc = json.load(open(tmp_path / "BENCH_fake.json"))
+    assert doc["roofline"] == {"grouped": {"launches": 1}}
+
+
+def test_repeats_keeps_per_row_min(tmp_path, monkeypatch, capsys):
+    """--repeats N runs the table N times and publishes the per-row minimum
+    (min-of-many ≈ the machine floor; single shots jitter past the gate's
+    20% threshold). Non-timed info rows keep their first occurrence."""
+    calls = {"n": 0}
+
+    def flaky_table():
+        calls["n"] += 1
+        k = calls["n"]
+        return [("fast", 100.0 + 50.0 * (k % 2), f"run{k}"),   # 150,100,150
+                ("slow", 300.0 - 10.0 * k, f"run{k}"),         # 290,280,270
+                ("info", 0.0, "first" if k == 1 else "later")]
+
+    _fake_tables(monkeypatch, [("fake", flaky_table)])
+    bench_run.main(["--tables", "fake", "--json", str(tmp_path),
+                    "--repeats", "3"])
+    assert calls["n"] == 3
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out[1:] == ["fast,100.0,run2", "slow,270.0,run3", "info,0.0,first"]
+    doc = json.load(open(tmp_path / "BENCH_fake.json"))
+    assert [r["us_per_call"] for r in doc["rows"]] == [100.0, 270.0, 0.0]
+
+    merged = bench_run.merge_min_rows([[("a", 5.0, "x")]])
+    assert merged == [("a", 5.0, "x")]
+
+
+# ------------------------------------------------------- check_regression
+def _doc(name, rows):
+    return {"schema": 1, "name": name, "git_rev": "abc", "backend": "cpu",
+            "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                     for n, us in rows]}
+
+
+def test_regression_detected_at_25_but_not_15_percent():
+    base = _doc("t", [("a", 10000.0), ("b", 10000.0)])
+    cur_25 = _doc("t", [("a", 12500.0), ("b", 10000.0)])
+    cur_15 = _doc("t", [("a", 11500.0), ("b", 10000.0)])
+    regs, _ = check_regression.compare(base, cur_25, threshold=0.20)
+    assert len(regs) == 1 and "t/a" in regs[0]
+    regs, _ = check_regression.compare(base, cur_15, threshold=0.20)
+    assert regs == []
+
+
+def test_rescale_forgives_uniformly_slower_machine():
+    names = ["a", "b", "c", "d", "e"]
+    base = _doc("t", [(n, 10000.0) for n in names])
+    # a 1.5x-slower runner is not a regression...
+    cur = _doc("t", [(n, 15000.0) for n in names])
+    regs, notes = check_regression.compare(base, cur, threshold=0.20)
+    assert regs == [] and any("rescale" in n for n in notes)
+    # ...but one row moving against its table-mates on that runner is
+    cur["rows"][0]["us_per_call"] = 25000.0
+    regs, _ = check_regression.compare(base, cur, threshold=0.20)
+    assert len(regs) == 1 and "t/a" in regs[0]
+    # small tables (<4 rows) skip the median rescale: a 2-row table with
+    # one +25% row must still be flagged
+    base2 = _doc("t", [("a", 10000.0), ("b", 10000.0)])
+    cur2 = _doc("t", [("a", 12500.0), ("b", 10000.0)])
+    regs, notes = check_regression.compare(base2, cur2, threshold=0.20)
+    assert len(regs) == 1 and not any("rescale" in n for n in notes)
+
+
+def test_min_delta_floor_guards_subresolution_rows():
+    """A fast row crossing +20% on pure timer jitter (tens of µs of delta)
+    must NOT flag; the same relative slip on a slow row, or a 2× blowup on
+    the fast row (delta well past the floor), must."""
+    base = _doc("t", [("fast", 400.0), ("slow", 10000.0)])
+    jitter = _doc("t", [("fast", 490.0), ("slow", 10000.0)])   # +90µs: noise
+    regs, _ = check_regression.compare(base, jitter, threshold=0.20)
+    assert regs == []
+    blowup = _doc("t", [("fast", 800.0), ("slow", 10000.0)])   # 2x: real
+    regs, _ = check_regression.compare(base, blowup, threshold=0.20)
+    assert len(regs) == 1 and "t/fast" in regs[0]
+    slow_reg = _doc("t", [("fast", 400.0), ("slow", 12500.0)])
+    regs, _ = check_regression.compare(base, slow_reg, threshold=0.20)
+    assert len(regs) == 1 and "t/slow" in regs[0]
+    # floor is tunable down to zero for exact gating
+    regs, _ = check_regression.compare(base, jitter, threshold=0.20,
+                                       min_delta_us=0.0)
+    assert len(regs) == 1
+
+
+def test_zero_us_and_unmatched_rows_are_skipped():
+    base = _doc("t", [("a", 100.0), ("info", 0.0), ("gone", 50.0)])
+    cur = _doc("t", [("a", 100.0), ("info", 0.0), ("new", 50.0)])
+    regs, notes = check_regression.compare(base, cur)
+    assert regs == []
+    joined = "\n".join(notes)
+    assert "gone" in joined and "new" in joined and "info" not in joined
+
+
+def test_missing_baseline_tolerated_with_warning(tmp_path):
+    cur_dir = tmp_path / "cur"
+    cur_dir.mkdir()
+    (cur_dir / "BENCH_newtable.json").write_text(
+        json.dumps(_doc("newtable", [("a", 1.0)])))
+    out = io.StringIO()
+    n = check_regression.check_dirs(str(tmp_path / "nobase"), str(cur_dir),
+                                    out=out)
+    assert n == 0 and "WARNING: no baseline" in out.getvalue()
+
+
+def test_check_dirs_end_to_end_exit_paths(tmp_path):
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    base_dir.mkdir(), cur_dir.mkdir()
+    (base_dir / "BENCH_t.json").write_text(
+        json.dumps(_doc("t", [("a", 10000.0), ("b", 10000.0)])))
+    (cur_dir / "BENCH_t.json").write_text(
+        json.dumps(_doc("t", [("a", 13000.0), ("b", 10000.0)])))
+    out = io.StringIO()
+    assert check_regression.check_dirs(str(base_dir), str(cur_dir),
+                                       out=out) == 1
+    assert "REGRESSION" in out.getvalue()
+    with pytest.raises(SystemExit):
+        check_regression.main(["--baseline", str(base_dir),
+                               "--current", str(cur_dir)])
+    # passing current == baseline is clean
+    out = io.StringIO()
+    assert check_regression.check_dirs(str(base_dir), str(base_dir),
+                                       out=out) == 0
+
+
+# ----------------------------------------------------- committed baselines
+@pytest.mark.parametrize("table", ["fl_decode_agg", "fl_partition"])
+def test_committed_baseline_is_valid(table):
+    path = os.path.join(BASELINE_DIR, f"BENCH_{table}.json")
+    assert os.path.exists(path), (
+        f"missing committed baseline {path} — regenerate with "
+        f"`python -m benchmarks.run --tables {table} "
+        f"--json benchmarks/baselines`")
+    doc = check_regression.load_artifact(path)
+    assert doc["name"] == table and "error" not in doc
+    timed = {r["name"]: r["us_per_call"] for r in doc["rows"]
+             if r["us_per_call"] > 0}
+    assert len(timed) >= 4              # enough rows for median rescaling
+    assert "roofline" in doc            # ROOFLINES-registered tables
+
+
+def test_committed_baseline_proves_grouped_overhead_bound():
+    """The PR's acceptance number: at cohort 64 the grouped one-dispatch
+    round holds the mixed-rung partition overhead to ≤1.3× the flat
+    single-spec path (the sequential bucket loop measured 1.5–4.9×)."""
+    doc = check_regression.load_artifact(
+        os.path.join(BASELINE_DIR, "BENCH_fl_partition.json"))
+    row = next(r for r in doc["rows"]
+               if r["name"] == "decode_agg_part2_mixed_grouped_c64")
+    m = re.search(r"overhead=([\d.]+)x", row["derived"])
+    assert m, row["derived"]
+    assert float(m.group(1)) <= 1.3
+
+
+def test_committed_baseline_roofline_shape():
+    doc = check_regression.load_artifact(
+        os.path.join(BASELINE_DIR, "BENCH_fl_decode_agg.json"))
+    roof = doc["roofline"]
+    for variant in ("loop", "vmap", "fused", "grouped"):
+        assert roof[variant]["launches"] >= 1
+    assert roof["grouped"]["launches"] == 1
+    assert roof["grouped"]["hbm_bytes"] <= roof["fused"]["hbm_bytes"]
+    assert roof["fused"]["hbm_bytes"] < roof["vmap"]["hbm_bytes"]
