@@ -771,6 +771,61 @@ def _roofline_fl_partition() -> dict:
                                hidden=(32,), chunk=256, n_buckets=2)
 
 
+# =====================================================================
+# streaming serve throughput (DESIGN.md §12.3) — sustained ingest
+# rounds/sec at large population × large cohort
+# =====================================================================
+def table_fl_serve() -> List[Row]:
+    """The million-client ingest loop: ``run_serve`` drives the donated
+    jitted step (device-side first-K pop → synthetic encoded cohort →
+    fused decode→aggregate → re-dispatch) and reports sustained
+    rounds/sec and ingested uplink bytes/sec. Population is 10^5 clients
+    (10^6 under REPRO_BENCH_FULL); per-round HOST work is one dispatch of
+    a cached executable regardless of N or cohort. Cohorts follow ISSUE 7
+    (256 / 4096 / 65536); the 65536-cohort row shrinks the model so
+    cohort×model stays CPU-CI-sized — the row prices the pop/re-dispatch
+    machinery at extreme K, not bulk decode FLOPs. ``ae`` swaps in the
+    chunked-AE codec (jnp path — the Pallas kernel interprets on CPU) and
+    ``shard`` runs the cohort axis through shard_map (1 device on CI —
+    dispatch overhead, not scaling)."""
+    from repro.core import codec
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
+    from repro.core.serve import ServeConfig, run_serve
+
+    n = 1_000_000 if FULL else 100_000
+    model = (1 << 16) if FULL else (1 << 12)
+    rows: List[Row] = []
+
+    def serve_row(name, spec, cohort, params=None, shard=False,
+                  n_rounds=2):
+        cfg = ServeConfig(n_clients=n, buffer_k=cohort, spec=spec,
+                          jitter=0.4, straggler_frac=0.05, seed=0,
+                          shard=shard)
+        _, rep = run_serve(cfg, n_rounds=n_rounds, codec_params=params,
+                           warmup=1)
+        rows.append((name, rep["us_per_round"],
+                     f"{rep['rounds_per_sec']:.2f} r/s "
+                     f"{rep['bytes_per_sec'] / 1e6:.1f} MB/s N={n}"))
+
+    q8 = codec.QuantizeSpec(size=model, bits=8, block=256)
+    serve_row("serve_q8_c256", q8, 256, n_rounds=3)
+    serve_row("serve_q8_c4096", q8, 4096)
+    # extreme cohort: keep cohort×model ≈ 16M so one CPU core sustains it
+    big_model = (1 << 10) if FULL else (1 << 8)
+    serve_row("serve_q8_c65536",
+              codec.QuantizeSpec(size=big_model, bits=8, block=big_model),
+              65536)
+
+    ae_cfg = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
+    ae_params = init_chunked_ae(jax.random.PRNGKey(0), ae_cfg)
+    serve_row("serve_ae_c256",
+              codec.ChunkedAESpec(size=model, cfg=ae_cfg,
+                                  use_kernel=False),
+              256, params=ae_params, n_rounds=3)
+    serve_row("serve_shard_c256", q8, 256, shard=True, n_rounds=3)
+    return rows
+
+
 ROOFLINES = {
     "fl_decode_agg": _roofline_fl_decode_agg,
     "fl_partition": _roofline_fl_partition,
@@ -791,5 +846,6 @@ ALL_TABLES = [
     ("ae_train", table_ae_train),
     ("fl_rate_control", table_fl_rate_control),
     ("fl_partition", table_fl_partition),
+    ("fl_serve", table_fl_serve),
     ("roofline_summary", table_roofline_summary),
 ]

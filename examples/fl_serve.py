@@ -1,0 +1,67 @@
+"""Streaming FL ingest demo (DESIGN.md §12.3): the million-client serving
+pipeline at laptop scale.
+
+A population of N clients streams encoded weight updates at the server; the
+first-K buffer fires one donated jitted step — device-side first-K pop
+(``pop_k_device``), synthetic encoded cohort, fused decode→aggregate,
+staleness-weighted model update, re-dispatch of exactly the drained cohort —
+and the loop reports sustained rounds/sec and ingested uplink bytes/sec.
+Per-round HOST work is one dispatch of a cached executable, independent of
+both population and cohort size.
+
+This is FL *serving* throughput. The LLM token-serving demo that used to
+own this filename is ``examples/llm_serve_decode.py`` (prefill/decode with
+a KV cache); the two share nothing but the word "serve".
+
+Run: PYTHONPATH=src python examples/fl_serve.py
+     PYTHONPATH=src python examples/fl_serve.py --n-clients 1000000 \
+         --buffer-k 4096 --spec topk
+"""
+import argparse
+
+from repro.core import codec
+from repro.core.serve import ServeConfig, round_bytes, run_serve
+
+
+def make_spec(kind: str, size: int):
+    return {
+        "q8": lambda: codec.QuantizeSpec(size=size, bits=8, block=256),
+        "q4": lambda: codec.QuantizeSpec(size=size, bits=4, block=256),
+        "topk": lambda: codec.TopKSpec(size=size, k=max(size // 64, 1)),
+        "identity": lambda: codec.IdentitySpec(size=size),
+    }[kind]()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-clients", type=int, default=100_000)
+    ap.add_argument("--buffer-k", type=int, default=256)
+    ap.add_argument("--model-size", type=int, default=4096)
+    ap.add_argument("--spec", default="q8",
+                    choices=["q8", "q4", "topk", "identity"])
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--straggler-frac", type=float, default=0.05)
+    ap.add_argument("--shard", action="store_true",
+                    help="shard_map the cohort axis over local devices")
+    args = ap.parse_args()
+
+    spec = make_spec(args.spec, args.model_size)
+    cfg = ServeConfig(n_clients=args.n_clients, buffer_k=args.buffer_k,
+                      spec=spec, jitter=0.4,
+                      straggler_frac=args.straggler_frac, seed=0,
+                      shard=args.shard)
+    print(f"population N={args.n_clients}  cohort K={args.buffer_k}  "
+          f"codec={args.spec}({args.model_size})  "
+          f"round uplink={round_bytes(cfg) / 1e6:.2f} MB")
+
+    state, rep = run_serve(cfg, n_rounds=args.rounds, warmup=2)
+    print(f"sustained: {rep['rounds_per_sec']:.2f} rounds/s  "
+          f"{rep['bytes_per_sec'] / 1e6:.2f} MB/s ingested  "
+          f"({rep['us_per_round'] / 1e3:.2f} ms/round)")
+    print(f"model version {int(state['version'])}, "
+          f"sim clock {rep['sim_time']:.1f}s simulated "
+          f"({int(state['version']) * args.buffer_k} updates aggregated)")
+
+
+if __name__ == "__main__":
+    main()

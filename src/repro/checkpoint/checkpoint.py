@@ -77,6 +77,7 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
                          codec_params: Optional[list] = None,
                          ratecontrol: Optional[tuple] = None,
                          scheduler_state: Optional[dict] = None,
+                         clients_soa: Optional[tuple] = None,
                          extra: Optional[dict] = None):
     """Checkpoint a federated run: global params plus (optionally) every
     per-client ``ClientState`` — error-feedback residuals and AE snapshot
@@ -99,13 +100,27 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
     (the pre-§9.3 behavior) silently mis-counted ``bytes_down`` across a
     save/load cycle.
 
+    ``clients_soa`` is the struct-of-arrays alternative to ``clients``
+    (DESIGN.md §12.4): ``ClientPool.state()``'s ``(tree, meta)`` pair —
+    ring contents, cursors, counts and the residual block round-trip as
+    whole stacked arrays instead of per-client entries, so checkpoint size
+    and save/load time stay O(arrays), not O(population) npz keys. Pass
+    exactly one of ``clients`` / ``clients_soa``.
+
     Array-valued state goes into the npz tree; the structural facts needed
     to rebuild it on load (which clients carry a residual, snapshot buffer
     shapes, scalar fields) ride in the JSON metadata."""
+    assert clients is None or clients_soa is None, (
+        "pass either the eager client list or the SoA pool state, not both")
     tree: dict = {"global": global_params}
     cmeta = None
     codec_meta = None
     rc_meta = None
+    soa_meta = None
+    if clients_soa is not None:
+        soa_tree, soa_meta = clients_soa
+        if soa_tree:
+            tree["clients_soa"] = soa_tree
     if codec_params is not None:
         tree["codecs"] = [{"params": p} if p is not None else {}
                           for p in codec_params]
@@ -158,6 +173,7 @@ def save_federated_state(path: str, round_idx: int, global_params: Pytree,
         tree["clients"] = ctree
     save_pytree(path, tree,
                 metadata={"round": round_idx, "clients": cmeta,
+                          "clients_soa": soa_meta,
                           "codecs": codec_meta, "ratecontrol": rc_meta,
                           "scheduler": scheduler_state, **(extra or {})})
 
@@ -185,9 +201,21 @@ def load_federated_state(path: str, like_params: Pytree,
     (``RateController.state_tree()`` of a freshly bound controller),
     ``meta["ratecontrol_tree"]`` holds the restored ladder params, with
     the JSON side already in ``meta["ratecontrol"]``. The scheduler's
-    ``state_dict()`` rides through as ``meta["scheduler"]``."""
+    ``state_dict()`` rides through as ``meta["scheduler"]``.
+
+    SoA checkpoints (saved via ``clients_soa``) surface the restored array
+    tree as ``meta["clients_soa_tree"]`` next to the JSON side in
+    ``meta["clients_soa"]``; the caller rebuilds the pool with
+    ``ClientPool.from_state`` (it holds the model template the residual
+    views unravel against — this module stays template-agnostic)."""
     meta = _peek_meta(path)
     like: dict = {"global": like_params}
+    soa_meta = meta.get("clients_soa")
+    if soa_meta is not None:
+        from repro.core.soa import ClientPool
+        soa_like = ClientPool.like_from_meta(soa_meta)
+        if soa_like:
+            like["clients_soa"] = soa_like
     codec_meta = meta.get("codecs")
     if codec_meta is not None and like_codec_params is not None:
         assert len(codec_meta) == len(like_codec_params)
@@ -217,6 +245,8 @@ def load_federated_state(path: str, like_params: Pytree,
         like["clients"] = clike
     tree, meta = load_pytree(path, like)
     meta = dict(meta or {})
+    if soa_meta is not None:
+        meta["clients_soa_tree"] = tree.get("clients_soa") or {}
     if "codecs" in like:
         meta["codec_params"] = [entry.get("params")
                                 for entry in tree["codecs"]]

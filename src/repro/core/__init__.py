@@ -101,6 +101,14 @@ from repro.core.scheduler import (  # noqa: F401
     SampledSync,
     SyncFedAvg,
 )
+from repro.core.arrival import ArrivalEngine, pop_k_device  # noqa: F401
+from repro.core.soa import ClientPool, ClientView  # noqa: F401
+from repro.core.serve import (  # noqa: F401
+    ServeConfig,
+    init_state as init_serve_state,
+    make_step as make_serve_step,
+    run_serve,
+)
 from repro.core.savings import (  # noqa: F401
     SavingsModel,
     reconcile,

@@ -1,0 +1,136 @@
+"""Vectorized event simulation for buffered-async FL (DESIGN.md §12.2).
+
+``AsyncBuffered``'s original event loop is a host-side ``heapq`` advanced
+one client at a time: every dispatch is a push, every buffer slot a pop,
+so per-round host bookkeeping is O(population · log population) in Python
+object churn. At the FedBuff regime the roadmap targets (10^5–10^6 clients
+with continuous arrivals) that loop — not the decode math — is the
+bottleneck.
+
+:class:`ArrivalEngine` replaces the heap with struct-of-arrays state: one
+``float64`` next-arrival-time per client plus one ``int64`` dispatch
+sequence number (the FIFO tie-break the heap's ``(time, seq, ci)`` tuples
+encode). Popping the first-K buffer becomes a single vectorized
+selection — ``np.partition`` finds the K-th arrival time in O(N), a
+lexsort over the (tiny) candidate set breaks ties — instead of K Python
+heap pops. Per-round *Python* work is O(cohort): pushes touch only the
+re-dispatched clients, and the one O(N) primitive left is a vectorized
+C-level partition, not an interpreted loop.
+
+The engine is **order-exact** against the heap: times stay ``float64``
+(the same Python floats the heap compares), sequence numbers are assigned
+identically, and ``pop_k`` returns exactly the K lexicographically
+smallest ``(time, seq)`` entries in pop order. ``AsyncBuffered`` keeps the
+heap as the differential oracle (``engine="heap"``) — the equivalence is
+property-tested across random populations, latency models, and seeds in
+tests/test_arrival.py.
+
+:func:`pop_k_device` is the jit-native variant the streaming serve
+pipeline (core/serve.py) stages on device: ``jax.lax.sort`` over the
+``(time, seq)`` key pair — the same lexicographic contract, zero host
+work — so the whole ingest round (pop → gather → decode→aggregate →
+scatter re-dispatch) compiles into one donated XLA computation.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ArrivalEngine:
+    """Struct-of-arrays event queue over a fixed client population.
+
+    State per client: ``times[ci]`` — the simulated arrival time of the
+    in-flight dispatch (``+inf`` = not in flight), ``seqs[ci]`` — the
+    global dispatch sequence number (FIFO tie-break; ``-1`` = not in
+    flight). A client has at most one in-flight update (the FedBuff
+    dispatch discipline), which is what lets the heap collapse to one
+    row per client."""
+
+    def __init__(self, n_clients: int):
+        self.n = int(n_clients)
+        self.times = np.full(self.n, np.inf, dtype=np.float64)
+        self.seqs = np.full(self.n, -1, dtype=np.int64)
+        self.next_seq = 0
+
+    # ------------------------------------------------------------------
+    def in_flight(self) -> int:
+        return int(np.count_nonzero(np.isfinite(self.times)))
+
+    def push(self, ci: int, t: float) -> None:
+        """Dispatch client ``ci`` with arrival time ``t``. O(1)."""
+        assert not np.isfinite(self.times[ci]), (
+            f"client {ci} already has an in-flight dispatch")
+        self.times[ci] = float(t)
+        self.seqs[ci] = self.next_seq
+        self.next_seq += 1
+
+    def push_many(self, cis: Sequence[int], ts: Sequence[float]) -> None:
+        """Vectorized dispatch of a cohort: sequence numbers are assigned
+        in ``cis`` order, matching one :meth:`push` per client."""
+        cis = np.asarray(cis, dtype=np.int64)
+        assert not np.isfinite(self.times[cis]).any(), (
+            "push_many over clients with in-flight dispatches")
+        self.times[cis] = np.asarray(ts, dtype=np.float64)
+        self.seqs[cis] = self.next_seq + np.arange(len(cis), dtype=np.int64)
+        self.next_seq += len(cis)
+
+    # ------------------------------------------------------------------
+    def pop_k(self, k: int) -> List[Tuple[float, int]]:
+        """Drain the first-K buffer: the K in-flight entries with the
+        lexicographically smallest ``(time, seq)``, in pop order — exactly
+        what K ``heapq.heappop`` calls on ``(time, seq, ci)`` tuples
+        return. One O(N) vectorized partition + an O(c log c) lexsort over
+        the boundary-tie candidate set; no interpreted per-entry loop."""
+        assert 0 < k <= self.in_flight(), (
+            f"pop_k({k}) with only {self.in_flight()} in flight")
+        # K-th smallest arrival time bounds the candidate set; ties AT the
+        # boundary make it a superset, resolved by the (time, seq) lexsort
+        kth = np.partition(self.times, k - 1)[k - 1]
+        cand = np.flatnonzero(self.times <= kth)
+        order = np.lexsort((self.seqs[cand], self.times[cand]))
+        take = cand[order[:k]]
+        out = [(float(self.times[ci]), int(ci)) for ci in take]
+        self.times[take] = np.inf
+        self.seqs[take] = -1
+        return out
+
+    # ------------------------------------------------------------------
+    # checkpointing: the same JSON shape AsyncBuffered's heap persists
+    # ([[time, seq, client], ...]), so heap- and vector-engine runs can
+    # restore each other's checkpoints (DESIGN.md §12.2)
+    # ------------------------------------------------------------------
+    def entries(self) -> List[List[float]]:
+        live = np.flatnonzero(np.isfinite(self.times))
+        return [[float(self.times[ci]), int(self.seqs[ci]), int(ci)]
+                for ci in live]
+
+    @classmethod
+    def from_entries(cls, n_clients: int, entries, next_seq: int
+                     ) -> "ArrivalEngine":
+        eng = cls(n_clients)
+        for t, s, ci in entries:
+            eng.times[int(ci)] = float(t)
+            eng.seqs[int(ci)] = int(s)
+        eng.next_seq = int(next_seq)
+        return eng
+
+
+# =====================================================================
+# jit-native pop for the device-resident serve pipeline (DESIGN.md §12.3)
+# =====================================================================
+def pop_k_device(times: jax.Array, seqs: jax.Array, k: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """First-K selection staged on device: ``lax.sort`` over the
+    ``(time, seq)`` key pair (ascending, lexicographic — the heap's exact
+    contract) returns the popped arrival times ``(k,)`` and client indices
+    ``(k,)``. ``lax.top_k`` on negated times alone would leave equal-time
+    tie order unspecified; carrying ``seq`` as the second sort key keeps
+    the selection deterministic and oracle-equal. O(N log N) inside the
+    kernel, O(1) host work."""
+    idx = jnp.arange(times.shape[0], dtype=jnp.int32)
+    s_times, _, s_idx = jax.lax.sort((times, seqs, idx), num_keys=2)
+    return s_times[:k], s_idx[:k]

@@ -112,6 +112,8 @@ class FederatedRun:
         scheduler: Optional[RoundScheduler] = None,
         lifecycle: Optional["AELifecycle"] = None,
         ratecontrol: Optional["RateController"] = None,
+        soa_state: bool = False,
+        ring_depth: Optional[int] = None,
     ):
         self.clf_cfg = clf_cfg
         self.datasets = list(datasets)
@@ -124,7 +126,24 @@ class FederatedRun:
         self.eval_data = eval_data
         self.global_params = init_classifier(
             jax.random.PRNGKey(fl_cfg.seed), clf_cfg)
-        self.clients = [ClientState() for _ in range(n)]
+        if soa_state:
+            # struct-of-arrays client state (DESIGN.md §12.1): same
+            # ClientState attribute surface via views, stacked device
+            # arrays underneath. Ring depth must cover every snapshot
+            # consumer's buffer_size — sized from whatever is attached
+            # (the eager lists are unbounded between truncations, but both
+            # consumers truncate to buffer_size right after appending, so
+            # depth == max buffer_size reproduces list semantics exactly)
+            from repro.core.soa import ClientPool
+            if ring_depth is None:
+                ring_depth = max(
+                    8,
+                    int(getattr(lifecycle, "buffer_size", 0) or 0),
+                    int(getattr(ratecontrol, "buffer_size", 0) or 0))
+            self.clients = ClientPool(n, self.global_params,
+                                      ring_depth=ring_depth)
+        else:
+            self.clients = [ClientState() for _ in range(n)]
         self.history: List[RoundRecord] = []
         self.round_offset = 0              # set by load_state on resume
         self.lifecycle = lifecycle
@@ -193,10 +212,13 @@ class FederatedRun:
         (the active rung differs per client, so a flat section would have
         no stable structure to restore into)."""
         from repro.checkpoint.checkpoint import save_federated_state
+        from repro.core.soa import ClientPool
         rc = self.ratecontrol
+        is_pool = isinstance(self.clients, ClientPool)
         save_federated_state(
             path, self.round_offset + len(self.history), self.global_params,
-            clients=self.clients,
+            clients=(None if is_pool else self.clients),
+            clients_soa=(self.clients.state() if is_pool else None),
             codec_params=(None if rc is not None else
                           [c.codec_params() for c in self.compressors]),
             ratecontrol=((rc.state_meta(), rc.state_tree())
@@ -232,7 +254,17 @@ class FederatedRun:
                 "params cannot be restored; rebuild the run to match the "
                 "checkpoint")
         self.global_params = params
-        if meta.get("client_states") is not None:
+        if meta.get("clients_soa") is not None:
+            # SoA checkpoint: rebuild the pool against the restored params
+            # template (DESIGN.md §12.4). The checkpoint's layout — not
+            # this run's ctor flag — decides, so an SoA run restores an
+            # SoA checkpoint regardless of how it was constructed.
+            from repro.core.soa import ClientPool
+            assert int(meta["clients_soa"]["n"]) == len(self.clients)
+            self.clients = ClientPool.from_state(
+                meta.get("clients_soa_tree") or {}, meta["clients_soa"],
+                self.global_params)
+        elif meta.get("client_states") is not None:
             assert len(meta["client_states"]) == len(self.clients)
             self.clients = meta["client_states"]
         for comp, restored in zip(self.compressors,

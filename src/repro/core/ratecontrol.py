@@ -48,6 +48,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.paper import AEConfig
@@ -184,8 +185,11 @@ class RateController:
             self._comps = [[c] for c in run.compressors]
         self.n_rungs = len(self._comps[0])
         start = self.initial_rung if self.ladder is not None else 0
-        self._rung = [start] * n
-        self._last_switch = [-(10 ** 9)] * n
+        # rung occupancy as packed arrays (DESIGN.md §12.1): O(1) numpy
+        # rows instead of O(population) Python list cells — and the layout
+        # jit-native rate control (ROADMAP item 4) will gather from
+        self._rung = np.full(n, start, dtype=np.int64)
+        self._last_switch = np.full(n, -(10 ** 9), dtype=np.int64)
         self._any_ae = any(c.ae_compressor() is not None
                            for row in self._comps for c in row)
         self._refitter = AELifecycle(
@@ -234,15 +238,18 @@ class RateController:
             for name in names:
                 assert len(self._pcomps[ci][name]) == self._pnrungs[name], (
                     f"client {ci} group {name!r}: rung count differs")
-        self._prung = [
-            {name: min(self.initial_rung, self._pnrungs[name] - 1)
-             for name in names} for _ in range(n)]
-        self._plast = [{name: -(10 ** 9) for name in names}
-                       for _ in range(n)]
+        # lane occupancy as one packed (n,) array per group — same SoA
+        # layout as the flat ladder's _rung (DESIGN.md §12.1)
+        self._prung = {
+            name: np.full(n, min(self.initial_rung,
+                                 self._pnrungs[name] - 1), dtype=np.int64)
+            for name in names}
+        self._plast = {name: np.full(n, -(10 ** 9), dtype=np.int64)
+                       for name in names}
         for ci in range(n):
             run.compressors[ci] = PartitionedCompressor(
                 self.partition,
-                {name: self._pcomps[ci][name][self._prung[ci][name]]
+                {name: self._pcomps[ci][name][self._prung[name][ci]]
                  for name in names})
         self._any_ae = any(c.ae_compressor() is not None
                            for row in self._pcomps
@@ -281,11 +288,11 @@ class RateController:
 
     # ------------------------------------------------------------------
     def rung_of(self, ci: int) -> int:
-        return self._rung[ci]
+        return int(self._rung[ci])
 
     def rung_of_group(self, ci: int, name: str) -> int:
         """Current rung of the ``(ci, name)`` lane (per-partition ladders)."""
-        return self._prung[ci][name]
+        return int(self._prung[name][ci])
 
     def wire_cost(self, rung: int) -> float:
         """Planned uplink bytes of one payload at ``rung`` (static — from
@@ -354,7 +361,7 @@ class RateController:
         refit_todo: List[int] = []
         for ci in sorted(moves):
             new = int(moves[ci])
-            old = self._rung[ci]
+            old = int(self._rung[ci])
             if new == old:
                 continue
             self._rung[ci] = new
@@ -397,13 +404,13 @@ class RateController:
         for lane in sorted(moves):
             ci, name = lane
             new = int(moves[lane])
-            old = self._prung[ci][name]
+            old = int(self._prung[name][ci])
             if new == old:
                 continue
-            self._prung[ci][name] = new
+            self._prung[name][ci] = new
             pc = partitioned(run.compressors[ci])
             pc.compressors[name] = self._pcomps[ci][name][new]
-            self._plast[ci][name] = r
+            self._plast[name][ci] = r
             switches.append((lane, old, new))
             if pc.compressors[name].ae_compressor() is not None:
                 refit_todo.append(lane)
@@ -461,7 +468,7 @@ class RateController:
             if self._pnrungs[name] > 1
             and len(run.clients[ci].part_snapshots.get(name, []))
             >= self.min_snapshots
-            and r - self._plast[ci][name] >= cooldown]
+            and r - int(self._plast[name][ci]) >= cooldown]
 
     # ------------------------------------------------------------------
     # checkpointing (DESIGN.md §9.3): meta is JSON state, tree is the
@@ -469,12 +476,20 @@ class RateController:
     # rung must not be lost when the client has since stepped away)
     # ------------------------------------------------------------------
     def state_meta(self) -> Dict[str, Any]:
+        # JSON shape unchanged from the list-based layout (per-client dicts
+        # for lanes, flat int lists otherwise) so old checkpoints restore
         if self._partitioned:
+            n = len(self._pcomps)
             return {"name": self.name, "partitioned": True,
-                    "rung": [dict(d) for d in self._prung],
-                    "last_switch": [dict(d) for d in self._plast]}
-        return {"name": self.name, "rung": list(self._rung),
-                "last_switch": list(self._last_switch)}
+                    "rung": [{name: int(arr[ci])
+                              for name, arr in self._prung.items()}
+                             for ci in range(n)],
+                    "last_switch": [{name: int(arr[ci])
+                                     for name, arr in self._plast.items()}
+                                    for ci in range(n)]}
+        return {"name": self.name,
+                "rung": [int(x) for x in self._rung],
+                "last_switch": [int(x) for x in self._last_switch]}
 
     def state_tree(self) -> Pytree:
         if self._partitioned:
@@ -495,10 +510,15 @@ class RateController:
                 "checkpoint holds a flat controller state but this run's "
                 "controller is per-partition — rebuild the run to match")
             assert len(meta["rung"]) == len(self._pcomps)
-            self._prung = [{n: int(k) for n, k in d.items()}
-                           for d in meta["rung"]]
-            self._plast = [{n: int(k) for n, k in d.items()}
-                           for d in meta["last_switch"]]
+            self._prung = {
+                name: np.asarray([int(d[name]) for d in meta["rung"]],
+                                 dtype=np.int64)
+                for name in self.partition.names}
+            self._plast = {
+                name: np.asarray([int(d[name])
+                                  for d in meta["last_switch"]],
+                                 dtype=np.int64)
+                for name in self.partition.names}
             for ci, row in enumerate(tree["codecs"]):
                 for name, rungs in row.items():
                     for k, entry in enumerate(rungs):
@@ -508,14 +528,16 @@ class RateController:
                 pc = partitioned(self.run.compressors[ci])
                 for name in self.partition.names:
                     pc.compressors[name] = \
-                        self._pcomps[ci][name][self._prung[ci][name]]
+                        self._pcomps[ci][name][self._prung[name][ci]]
             return
         assert not meta.get("partitioned"), (
             "checkpoint holds a per-partition controller state but this "
             "run's controller is flat — rebuild the run to match")
         assert len(meta["rung"]) == len(self._comps)
-        self._rung = [int(x) for x in meta["rung"]]
-        self._last_switch = [int(x) for x in meta["last_switch"]]
+        self._rung = np.asarray([int(x) for x in meta["rung"]],
+                                dtype=np.int64)
+        self._last_switch = np.asarray(
+            [int(x) for x in meta["last_switch"]], dtype=np.int64)
         for ci, row in enumerate(tree["codecs"]):
             for k, entry in enumerate(row):
                 if entry.get("params") is not None:
@@ -566,7 +588,7 @@ class DistortionTarget(RateController):
             for ci, name in self._eligible_lanes(run, r, participants,
                                                  self.cooldown):
                 seg = run.clients[ci].part_snapshots[name][-1]
-                cur = self._prung[ci][name]
+                cur = int(self._prung[name][ci])
                 err = self._lane_rung_err(ci, name, cur, seg)
                 if err > self.target and cur + 1 < self._pnrungs[name]:
                     moves[(ci, name)] = cur + 1
@@ -578,7 +600,7 @@ class DistortionTarget(RateController):
         moves: Dict[int, int] = {}
         for ci in self._eligible(run, r, participants, self.cooldown):
             flat = run.clients[ci].snapshots[-1]
-            cur = self._rung[ci]
+            cur = int(self._rung[ci])
             err = self._rung_err(run, ci, cur, flat)
             if err > self.target and cur + 1 < self.n_rungs:
                 moves[ci] = cur + 1
@@ -658,11 +680,11 @@ class ByteBudget(RateController):
                      for name in self.partition.names]
         lane_set = set(lanes)
         frozen = [ln for ln in all_lanes if ln not in lane_set]
-        fixed_spend = sum(self._pcosts[name][self._prung[ci][name]]
+        fixed_spend = sum(self._pcosts[name][self._prung[name][ci]]
                           for ci, name in frozen)
         score = {
             (ci, name): self._lane_rung_err(
-                ci, name, self._prung[ci][name],
+                ci, name, int(self._prung[name][ci]),
                 run.clients[ci].part_snapshots[name][-1])
             for ci, name in lanes}
         order = sorted(lanes, key=lambda ln: (-score[ln], ln))
@@ -671,7 +693,7 @@ class ByteBudget(RateController):
                                   for _, name in lanes)
         if spent > self.budget:      # budget below the all-cheapest floor
             return {(ci, name): 0 for ci, name in lanes
-                    if self._prung[ci][name] != 0}
+                    if self._prung[name][ci] != 0}
         changed = True
         while changed:
             changed = False
@@ -687,4 +709,4 @@ class ByteBudget(RateController):
                     spent += delta
                     changed = True
         return {(ci, name): k for (ci, name), k in alloc.items()
-                if k != self._prung[ci][name]}
+                if k != self._prung[name][ci]}

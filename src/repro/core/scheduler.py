@@ -507,14 +507,27 @@ class AsyncBuffered(RoundScheduler):
     trajectory equals :class:`SyncFedAvg` (tested). Training is computed
     lazily at arrival, against the global snapshot stored at dispatch, with
     local-train seed keyed to the dispatch version — stale clients train on
-    stale models, as in a real deployment."""
+    stale models, as in a real deployment.
+
+    ``engine`` selects the event-queue implementation (DESIGN.md §12.2):
+    ``"heap"`` is the original host ``heapq`` loop — kept as the
+    differential oracle — and ``"vector"`` is the struct-of-arrays
+    :class:`~repro.core.arrival.ArrivalEngine` whose first-K drain is one
+    vectorized selection instead of K Python pops. The two are
+    order-exact (same ``(time, seq)`` lexicographic contract, same
+    ``float64`` times), so trajectories and byte accounting are
+    bit-identical (tests/test_arrival.py); both serialize the same
+    checkpoint shape, so either engine can restore the other's runs."""
 
     buffer_k: int = 2
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
     staleness_power: float = 0.5
+    engine: str = "heap"               # "heap" (oracle) | "vector" (SoA)
     name: str = "async_buffered"
 
     def bind(self, run) -> None:
+        assert self.engine in ("heap", "vector"), (
+            f"unknown AsyncBuffered engine {self.engine!r}")
         super().bind(run)
         self._reset()
 
@@ -527,10 +540,14 @@ class AsyncBuffered(RoundScheduler):
         ``on_restore`` zeroed ``_pending_down`` and re-dispatched everyone,
         so dispatched-but-unrecorded broadcast bytes were dropped and the
         restart re-charged a full-federation broadcast the uninterrupted
-        run never shipped."""
-        return {"heap": [[float(t), int(s), int(ci)]
-                         for t, s, ci in self._heap],
-                "seq": self._seq, "version": self._version,
+        run never shipped.
+
+        Both engines emit the same ``{"heap": [[t, seq, ci], ...]}`` shape
+        (the vector engine's rows are its finite-time entries), so a
+        vector-engine run restores a heap-engine checkpoint and vice
+        versa."""
+        return {"heap": self._entries(), "seq": self._next_seq(),
+                "version": self._version,
                 "clock": self._clock, "pending_down": self._pending_down,
                 "to_redispatch": list(self._to_redispatch)}
 
@@ -541,10 +558,16 @@ class AsyncBuffered(RoundScheduler):
             # restored global model at version 0 (re-broadcast charged)
             self._reset()
             return
-        self._heap = [(float(t), int(s), int(ci))
-                      for t, s, ci in state["heap"]]
-        heapq.heapify(self._heap)
-        self._seq = int(state["seq"])
+        from repro.core.arrival import ArrivalEngine
+        self._bcast_cache = None
+        if self.engine == "vector":
+            self._arrivals = ArrivalEngine.from_entries(
+                len(self.run.datasets), state["heap"], int(state["seq"]))
+        else:
+            self._heap = [(float(t), int(s), int(ci))
+                          for t, s, ci in state["heap"]]
+            heapq.heapify(self._heap)
+            self._seq = int(state["seq"])
         self._version = int(state["version"])
         self._clock = float(state["clock"])
         self._pending_down = float(state["pending_down"])
@@ -552,8 +575,16 @@ class AsyncBuffered(RoundScheduler):
 
     def _reset(self) -> None:
         run = self.run
-        self._heap: List[Tuple[float, int, int]] = []   # (arrival, seq, ci)
-        self._seq = 0                                   # FIFO tie-break
+        # broadcast-size cache for _dispatch (satellite of DESIGN.md §12):
+        # tree_bytes(global_params) only changes when the global model is
+        # replaced, i.e. exactly when _version bumps — keyed on it
+        self._bcast_cache: Optional[Tuple[int, float]] = None
+        if self.engine == "vector":
+            from repro.core.arrival import ArrivalEngine
+            self._arrivals = ArrivalEngine(len(run.datasets))
+        else:
+            self._heap: List[Tuple[float, int, int]] = []  # (arrival,seq,ci)
+            self._seq = 0                                  # FIFO tie-break
         self._version = 0                               # server model version
         self._clock = 0.0
         self._pending_down = 0.0    # downlink dispatched, not yet recorded
@@ -565,30 +596,72 @@ class AsyncBuffered(RoundScheduler):
         for ci in range(len(run.datasets)):
             self._dispatch(ci)
 
+    # ---- engine-neutral event-queue facade (DESIGN.md §12.2) ----------
+    def _push(self, ci: int, t: float) -> None:
+        if self.engine == "vector":
+            self._arrivals.push(ci, t)
+        else:
+            heapq.heappush(self._heap, (t, self._seq, ci))
+            self._seq += 1
+
+    def _pop_k(self, k: int) -> List[Tuple[float, int]]:
+        """First-K arrivals as ``(time, ci)`` in pop order. Pops happen only
+        while re-dispatch is deferred (no pushes mid-drain), so one batched
+        K-selection on the vector engine is equivalent to K sequential heap
+        pops — the property tests/test_arrival.py exercises directly."""
+        if self.engine == "vector":
+            return self._arrivals.pop_k(k)
+        out = []
+        for _ in range(k):
+            t, _, ci = heapq.heappop(self._heap)
+            out.append((t, ci))
+        return out
+
+    def _in_flight(self) -> int:
+        return (self._arrivals.in_flight() if self.engine == "vector"
+                else len(self._heap))
+
+    def _next_seq(self) -> int:
+        return (self._arrivals.next_seq if self.engine == "vector"
+                else self._seq)
+
+    def _entries(self) -> List[List[float]]:
+        if self.engine == "vector":
+            return self._arrivals.entries()
+        return [[float(t), int(s), int(ci)] for t, s, ci in self._heap]
+
+    def _broadcast_bytes(self) -> float:
+        """Downlink cost of one model broadcast, cached per global version:
+        ``tree_bytes`` walks the whole pytree, and the eager path recomputed
+        it per client per dispatch — O(population · tree) host work per
+        reset for a value that is constant between aggregations."""
+        if self._bcast_cache is None or self._bcast_cache[0] != self._version:
+            self._bcast_cache = (
+                self._version, float(tree_bytes(self.run.global_params)))
+        return self._bcast_cache[1]
+
     def _dispatch(self, ci: int) -> None:
         run = self.run
         state = run.clients[ci]
         state.version = self._version
         state.dispatched = run.global_params
-        self._pending_down += float(tree_bytes(run.global_params))
+        self._pending_down += self._broadcast_bytes()
         lat = self.latency.sample(ci, self._version, len(run.datasets))
-        heapq.heappush(self._heap, (self._clock + lat, self._seq, ci))
-        self._seq += 1
+        self._push(ci, self._clock + lat)
 
     def run_round(self, r: int):
         run, cfg = self.run, self.run.cfg
         for ci in self._to_redispatch:     # deferred from the previous flush
             self._dispatch(ci)
         self._to_redispatch = []
-        k = min(self.buffer_k, len(self._heap))
+        k = min(self.buffer_k, self._in_flight())
         assert k > 0, "async scheduler has no in-flight clients"
         bytes_down = self._pending_down
         self._pending_down = 0.0
 
         encoded, stales = [], []
         arrived: List[int] = []
-        for _ in range(k):
-            t, _, ci = heapq.heappop(self._heap)
+        for t, ci in self._pop_k(k):
             self._clock = max(self._clock, t)
             state = run.clients[ci]
             # train lazily, against the (possibly stale) dispatched snapshot

@@ -1,0 +1,576 @@
+"""Struct-of-arrays per-client state: the million-client layout
+(DESIGN.md §12.1).
+
+The eager layout — ``Dict[int, ClientState]`` of Python objects, each
+holding its own residual pytree and snapshot list — costs O(population)
+host objects and O(population) Python attribute traffic per round. At the
+10^5–10^6-client regime ROADMAP item 2 targets, that bookkeeping (not the
+decode math) dominates. :class:`ClientPool` stores the same state as
+stacked arrays indexed by client id:
+
+* **error-feedback residuals** — one ``(N, P)`` device array plus a host
+  presence mask; a sampled cohort's residuals are a ``gather``, the
+  post-round writeback a ``scatter``, and the array never leaves the
+  device between rounds;
+* **snapshot rings** — fixed-depth ring buffers ``(N, depth, P)`` with
+  ``int32`` write cursors and fill counts (one ring per lifecycle lane:
+  the flat ring plus one per partition group), replacing per-client
+  Python lists of device arrays;
+* **lifecycle scalars** — ``version`` / ``last_refresh`` / drift
+  baselines as packed host arrays (they are read per-client by host
+  policy code, so keeping them in numpy avoids a device sync per access);
+* **dispatched model snapshots** (async) — a host list of *references*:
+  every client dispatched at the same global version shares one params
+  object, so memory is O(distinct in-flight versions), not O(N · P).
+
+Compatibility is by **views**: ``pool[ci]`` returns a
+:class:`ClientView` exposing the exact ``ClientState`` attribute surface
+(``residual``, ``snapshots``, ``part_snapshots``, ...), every read/write
+passing through to the pooled arrays. The schedulers, AE lifecycle, rate
+controllers, and savings reconciliation run unchanged on either layout,
+which is what lets the SoA path be differentially tested (bytes AND
+trajectory, bit-exact) against the eager layout — see
+tests/test_soa_state.py. The batched accessors
+(:meth:`ClientPool.gather_residuals` / :meth:`scatter_residuals` /
+``RingStore.append_rows``) are the cohort-wide fast path the streaming
+serve pipeline and vectorized schedulers use directly.
+
+Checkpointing round-trips the pooled arrays *as arrays* (ring contents +
+cursors + counts in one npz entry each) instead of exploding them into
+per-client entries — ``ClientPool.state()`` /
+``ClientPool.from_state()``, wired through
+``checkpoint.save_federated_state(clients_soa=...)`` (DESIGN.md §12.4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+Pytree = Any
+
+
+# =====================================================================
+# ring buffers: (N, depth, p) storage for the per-lane snapshot rings
+# =====================================================================
+class RingStore:
+    """Fixed-depth ring buffers for all N clients of one lane, allocated
+    lazily on the first append (the row width ``p`` is the lane's payload
+    segment length, only known when the first snapshot arrives). Logical
+    index 0 is the oldest retained row; ``append`` past ``depth``
+    overwrites the oldest — identical to the eager
+    ``list.append`` + ``del lst[:-depth]`` discipline every consumer
+    (lifecycle/ratecontrol ``buffer_snapshot``) follows."""
+
+    def __init__(self, n: int, depth: int):
+        assert depth > 0
+        self.n, self.depth = int(n), int(depth)
+        self.buf: Optional[jax.Array] = None        # (N, depth, p) lazily
+        self.cursor = np.zeros(self.n, dtype=np.int32)
+        self.count = np.zeros(self.n, dtype=np.int32)
+
+    @property
+    def p(self) -> Optional[int]:
+        return None if self.buf is None else int(self.buf.shape[-1])
+
+    def _ensure(self, p: int, dtype) -> None:
+        if self.buf is None:
+            self.buf = jnp.zeros((self.n, self.depth, int(p)), dtype=dtype)
+        else:
+            assert int(p) == self.p, (
+                f"snapshot row width changed: ring holds {self.p}, got {p}")
+
+    def append(self, ci: int, row: jax.Array) -> None:
+        row = jnp.asarray(row)
+        self._ensure(row.shape[0], row.dtype)
+        self.buf = self.buf.at[ci, self.cursor[ci]].set(row)
+        self.cursor[ci] = (self.cursor[ci] + 1) % self.depth
+        self.count[ci] = min(self.count[ci] + 1, self.depth)
+
+    def append_rows(self, cis, rows: jax.Array) -> None:
+        """Cohort-wide append: one scatter for the whole batch."""
+        cis = np.asarray(cis, dtype=np.int32)
+        rows = jnp.asarray(rows)
+        self._ensure(rows.shape[-1], rows.dtype)
+        self.buf = self.buf.at[cis, self.cursor[cis]].set(rows)
+        self.cursor[cis] = (self.cursor[cis] + 1) % self.depth
+        self.count[cis] = np.minimum(self.count[cis] + 1, self.depth)
+
+    def truncate(self, ci: int, keep: int) -> None:
+        """Keep only the newest ``keep`` rows (``del lst[:-keep]``)."""
+        self.count[ci] = min(self.count[ci], max(int(keep), 0))
+
+    def row(self, ci: int, i: int) -> jax.Array:
+        n = int(self.count[ci])
+        if i < 0:
+            i += n
+        assert 0 <= i < n, f"ring index {i} out of range for {n} rows"
+        phys = (int(self.cursor[ci]) - n + i) % self.depth
+        return self.buf[ci, phys]
+
+    def rows(self, ci: int) -> List[jax.Array]:
+        return [self.row(ci, i) for i in range(int(self.count[ci]))]
+
+    def clear(self, ci: int) -> None:
+        self.count[ci] = 0
+
+
+class RingView:
+    """List-compatible view of one client's ring: exactly the slice of the
+    ``list`` API the lifecycle/ratecontrol snapshot discipline uses
+    (``append``, ``del v[:-k]``, ``len``, indexing, iteration, truthiness,
+    ``jnp.stack(v)`` via iteration)."""
+
+    __slots__ = ("_store", "_ci")
+
+    def __init__(self, store: RingStore, ci: int):
+        self._store, self._ci = store, ci
+
+    def append(self, row) -> None:
+        self._store.append(self._ci, row)
+
+    def __delitem__(self, key) -> None:
+        # the one deletion pattern in the codebase: ``del v[:-k]`` (keep
+        # the newest k) and its ``del v[:]``/``del v[:0]`` edge cases
+        assert isinstance(key, slice) and key.step is None and \
+            key.start is None, f"unsupported ring deletion {key!r}"
+        stop = key.stop
+        if stop is None:                   # del v[:] → drop everything
+            self._store.clear(self._ci)
+        elif stop < 0:                     # del v[:-k] → keep newest k
+            self._store.truncate(self._ci, -stop)
+        elif stop > 0:                     # del v[:k] → drop oldest k
+            self._store.truncate(self._ci, len(self) - stop)
+
+    def __len__(self) -> int:
+        return int(self._store.count[self._ci])
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __getitem__(self, i: int) -> jax.Array:
+        return self._store.row(self._ci, i)
+
+    def __iter__(self) -> Iterator[jax.Array]:
+        return iter(self._store.rows(self._ci))
+
+
+class _EmptyRing(RingView):
+    """Placeholder for ``part_snapshots.get(name, [])`` on an absent lane:
+    read-only empty, so accidental writes fail loudly instead of silently
+    creating an unnamed ring."""
+
+    __slots__ = ()
+
+    def __init__(self):                    # no store
+        pass
+
+    def append(self, row) -> None:
+        raise KeyError("appending to an absent partition ring — use "
+                       "part_snapshots.setdefault(name, []) first")
+
+    def __delitem__(self, key) -> None:
+        pass
+
+    def __len__(self) -> int:
+        return 0
+
+    def __getitem__(self, i):
+        raise IndexError("empty ring")
+
+    def __iter__(self):
+        return iter(())
+
+
+# =====================================================================
+# dict-shaped views over the per-partition SoA state
+# =====================================================================
+class _PartSnapshots:
+    """``ClientState.part_snapshots``-compatible mapping for one client:
+    ``{group_name: snapshot_ring}`` backed by one :class:`RingStore` per
+    group in the pool."""
+
+    __slots__ = ("_pool", "_ci")
+
+    def __init__(self, pool: "ClientPool", ci: int):
+        self._pool, self._ci = pool, ci
+
+    def setdefault(self, name: str, default) -> RingView:
+        store = self._pool.part_rings.get(name)
+        if store is None:
+            store = RingStore(self._pool.n, self._pool.ring_depth)
+            self._pool.part_rings[name] = store
+        return RingView(store, self._ci)
+
+    def get(self, name: str, default=None):
+        store = self._pool.part_rings.get(name)
+        if store is None or store.count[self._ci] == 0:
+            return default if default is not None else None
+        return RingView(store, self._ci)
+
+    def __getitem__(self, name: str) -> RingView:
+        store = self._pool.part_rings[name]
+        return RingView(store, self._ci)
+
+    def __contains__(self, name: str) -> bool:
+        store = self._pool.part_rings.get(name)
+        return store is not None and store.count[self._ci] > 0
+
+    def items(self):
+        return [(name, RingView(store, self._ci))
+                for name, store in sorted(self._pool.part_rings.items())
+                if store.count[self._ci] > 0]
+
+    def keys(self):
+        return [name for name, _ in self.items()]
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+
+class _PartScalars:
+    """``part_last_refresh``/``part_baseline``-compatible mapping for one
+    client, backed by pooled per-group host arrays. Key presence is
+    encoded in-band (``-1`` rounds / ``NaN`` baselines mean "never set"),
+    matching the eager dicts' get-with-default access pattern."""
+
+    __slots__ = ("_pool", "_ci", "_field")
+
+    def __init__(self, pool: "ClientPool", ci: int, field: str):
+        self._pool, self._ci, self._field = pool, ci, field
+
+    def _arrays(self) -> Dict[str, np.ndarray]:
+        return getattr(self._pool, self._field)
+
+    def _is_set(self, v) -> bool:
+        if self._field == "part_last_refresh_arr":
+            return v >= 0
+        return True                         # baselines: NaN encodes None
+
+    def _decode(self, v):
+        if self._field == "part_baseline_arr":
+            return None if np.isnan(v) else float(v)
+        return int(v)
+
+    def get(self, name: str, default=None):
+        arr = self._arrays().get(name)
+        if arr is None or not self._is_set(arr[self._ci]):
+            return default
+        return self._decode(arr[self._ci])
+
+    def __getitem__(self, name: str):
+        arr = self._arrays().get(name)
+        if arr is None or not self._is_set(arr[self._ci]):
+            raise KeyError(name)
+        return self._decode(arr[self._ci])
+
+    def __setitem__(self, name: str, value) -> None:
+        arrays = self._arrays()
+        if name not in arrays:
+            if self._field == "part_last_refresh_arr":
+                arrays[name] = np.full(self._pool.n, -1, dtype=np.int64)
+            else:
+                arrays[name] = np.full(self._pool.n, np.nan,
+                                       dtype=np.float64)
+        arrays[name][self._ci] = (np.nan if value is None else value)
+
+    def items(self):
+        # NaN/-1 sentinels read as "absent": a baseline explicitly set to
+        # None is indistinguishable from never-set, which every consumer's
+        # get-with-default access treats identically anyway
+        out = []
+        for name, arr in sorted(self._arrays().items()):
+            v = arr[self._ci]
+            if self._is_set(v) and not (self._field == "part_baseline_arr"
+                                        and np.isnan(v)):
+                out.append((name, self._decode(v)))
+        return out
+
+    def keys(self):
+        return [k for k, _ in self.items()]
+
+    def __iter__(self):
+        return iter(self.keys())
+
+
+# =====================================================================
+# the pool + per-client view
+# =====================================================================
+class ClientView:
+    """One client's window into the pool: the full ``ClientState``
+    attribute surface, every access passing through to the stacked
+    arrays. Cheap to construct (two slots) — ``pool[ci]`` makes a fresh
+    one per access rather than caching N of them."""
+
+    __slots__ = ("_pool", "ci")
+
+    def __init__(self, pool: "ClientPool", ci: int):
+        self._pool, self.ci = pool, ci
+
+    # -- error-feedback residual (model-shaped pytree or None) ---------
+    @property
+    def residual(self) -> Optional[Pytree]:
+        p = self._pool
+        if not p.res_mask[self.ci]:
+            return None
+        return p.unravel(p.residuals[self.ci])
+
+    @residual.setter
+    def residual(self, value: Optional[Pytree]) -> None:
+        p = self._pool
+        if value is None:
+            p.res_mask[self.ci] = False
+            return
+        flat, _ = ravel_pytree(value)
+        p.set_residual_rows([self.ci], flat[None, :])
+
+    # -- lifecycle scalars ---------------------------------------------
+    @property
+    def version(self) -> int:
+        return int(self._pool.versions[self.ci])
+
+    @version.setter
+    def version(self, v: int) -> None:
+        self._pool.versions[self.ci] = int(v)
+
+    @property
+    def last_refresh(self) -> int:
+        return int(self._pool.last_refresh_arr[self.ci])
+
+    @last_refresh.setter
+    def last_refresh(self, v: int) -> None:
+        self._pool.last_refresh_arr[self.ci] = int(v)
+
+    @property
+    def ae_baseline(self) -> Optional[float]:
+        v = self._pool.baseline_arr[self.ci]
+        return None if np.isnan(v) else float(v)
+
+    @ae_baseline.setter
+    def ae_baseline(self, v: Optional[float]) -> None:
+        self._pool.baseline_arr[self.ci] = np.nan if v is None else float(v)
+
+    # -- async dispatch snapshot (shared reference per version) --------
+    @property
+    def dispatched(self) -> Optional[Pytree]:
+        return self._pool.dispatched[self.ci]
+
+    @dispatched.setter
+    def dispatched(self, value: Optional[Pytree]) -> None:
+        self._pool.dispatched[self.ci] = value
+
+    # -- snapshot rings ------------------------------------------------
+    @property
+    def snapshots(self) -> RingView:
+        return RingView(self._pool.ring, self.ci)
+
+    @property
+    def part_snapshots(self) -> _PartSnapshots:
+        return _PartSnapshots(self._pool, self.ci)
+
+    @property
+    def part_last_refresh(self) -> _PartScalars:
+        return _PartScalars(self._pool, self.ci, "part_last_refresh_arr")
+
+    @property
+    def part_baseline(self) -> _PartScalars:
+        return _PartScalars(self._pool, self.ci, "part_baseline_arr")
+
+
+class ClientPool:
+    """Struct-of-arrays storage for N clients' run state (module
+    docstring). ``template`` fixes the model pytree structure P the
+    residual/dispatched views ravel against; ``ring_depth`` bounds every
+    snapshot ring (it must be ≥ the largest consumer ``buffer_size`` —
+    ``FederatedRun`` sizes it from the attached lifecycle/controller)."""
+
+    def __init__(self, n: int, template: Pytree, ring_depth: int = 16):
+        flat, unravel = ravel_pytree(template)
+        self.n = int(n)
+        self.psize = int(flat.size)
+        self.dtype = flat.dtype
+        self.unravel = unravel
+        self.ring_depth = int(ring_depth)
+        self.residuals: Optional[jax.Array] = None    # (N, P) lazily
+        self.res_mask = np.zeros(self.n, dtype=bool)
+        self.versions = np.zeros(self.n, dtype=np.int64)
+        self.last_refresh_arr = np.full(self.n, -1, dtype=np.int64)
+        self.baseline_arr = np.full(self.n, np.nan, dtype=np.float64)
+        self.dispatched: List[Optional[Pytree]] = [None] * self.n
+        self.ring = RingStore(self.n, self.ring_depth)
+        self.part_rings: Dict[str, RingStore] = {}
+        self.part_last_refresh_arr: Dict[str, np.ndarray] = {}
+        self.part_baseline_arr: Dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return self.n
+
+    def __getitem__(self, ci: int) -> ClientView:
+        assert 0 <= ci < self.n, f"client {ci} out of range"
+        return ClientView(self, ci)
+
+    def __iter__(self) -> Iterator[ClientView]:
+        return (ClientView(self, ci) for ci in range(self.n))
+
+    # ------------------------------------------------------------------
+    # cohort-wide batched accessors: the gather/scatter fast path
+    # ------------------------------------------------------------------
+    def _ensure_residuals(self) -> None:
+        if self.residuals is None:
+            self.residuals = jnp.zeros((self.n, self.psize),
+                                       dtype=self.dtype)
+
+    def gather_residuals(self, cis) -> Tuple[jax.Array, np.ndarray]:
+        """Cohort residual rows ``(C, P)`` (zeros where absent) plus the
+        host presence mask ``(C,)`` — one device gather."""
+        cis = np.asarray(cis, dtype=np.int32)
+        self._ensure_residuals()
+        return self.residuals[jnp.asarray(cis)], self.res_mask[cis]
+
+    def set_residual_rows(self, cis, rows: jax.Array) -> None:
+        """Cohort writeback ``(C, P)`` — one device scatter."""
+        cis_np = np.asarray(cis, dtype=np.int32)
+        self._ensure_residuals()
+        self.residuals = self.residuals.at[jnp.asarray(cis_np)].set(
+            jnp.asarray(rows, dtype=self.dtype))
+        self.res_mask[cis_np] = True
+
+    def scatter_residuals(self, cis, rows: jax.Array) -> None:
+        self.set_residual_rows(cis, rows)
+
+    # ------------------------------------------------------------------
+    # checkpointing (DESIGN.md §12.4): arrays stay arrays
+    # ------------------------------------------------------------------
+    def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(array tree, JSON meta). Device-sized state — residual block,
+        ring contents, dispatched rows — rides the npz tree as whole
+        arrays (cursor/count as int32 arrays alongside their ring). Host
+        *scalars* (versions, refresh rounds, drift baselines, presence
+        mask) ride the JSON meta instead: ``load_pytree`` round-trips
+        through ``jnp.asarray``, which under the repo's x64-disabled
+        default would silently downcast int64/float64 — JSON preserves
+        them exactly (NaN baselines encode as ``null``)."""
+        tree: Dict[str, Any] = {}
+        if self.residuals is not None:
+            tree["residuals"] = self.residuals
+        if self.ring.buf is not None:
+            tree["ring"] = {"buf": self.ring.buf,
+                            "cursor": self.ring.cursor,
+                            "count": self.ring.count}
+        parts: Dict[str, Any] = {}
+        for name, store in self.part_rings.items():
+            if store.buf is not None:
+                parts[name] = {"buf": store.buf, "cursor": store.cursor,
+                               "count": store.count}
+        if parts:
+            tree["part_rings"] = parts
+        disp_idx = [ci for ci, d in enumerate(self.dispatched)
+                    if d is not None]
+        if disp_idx:
+            tree["dispatched"] = jnp.stack(
+                [ravel_pytree(self.dispatched[ci])[0] for ci in disp_idx])
+
+        def _floats(arr):
+            return [None if np.isnan(v) else float(v) for v in arr]
+
+        meta = {
+            "n": self.n, "psize": self.psize,
+            "ring_depth": self.ring_depth,
+            "has_residuals": self.residuals is not None,
+            "res_mask": [bool(b) for b in self.res_mask],
+            "versions": [int(v) for v in self.versions],
+            "last_refresh": [int(v) for v in self.last_refresh_arr],
+            "baseline": _floats(self.baseline_arr),
+            "ring_p": self.ring.p,
+            "part_ring_p": {name: store.p
+                            for name, store in self.part_rings.items()
+                            if store.buf is not None},
+            "part_last_refresh": {
+                name: [int(v) for v in arr]
+                for name, arr in sorted(self.part_last_refresh_arr.items())},
+            "part_baseline": {
+                name: _floats(arr)
+                for name, arr in sorted(self.part_baseline_arr.items())},
+            "dispatched_idx": disp_idx,
+            "dtype": str(np.dtype(self.dtype)),
+        }
+        return tree, meta
+
+    @staticmethod
+    def like_from_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
+        """Zero-filled structure matching :meth:`state`'s tree, for
+        ``checkpoint.load_pytree`` shape/dtype validation."""
+        n = int(meta["n"])
+        dt = np.dtype(meta["dtype"])
+        depth = int(meta["ring_depth"])
+
+        def _ring_like(p):
+            return {"buf": jnp.zeros((n, depth, int(p)), dtype=dt),
+                    "cursor": np.zeros(n, dtype=np.int32),
+                    "count": np.zeros(n, dtype=np.int32)}
+
+        like: Dict[str, Any] = {}
+        if meta["has_residuals"]:
+            like["residuals"] = jnp.zeros((n, int(meta["psize"])), dtype=dt)
+        if meta["ring_p"] is not None:
+            like["ring"] = _ring_like(meta["ring_p"])
+        parts = {name: _ring_like(p)
+                 for name, p in (meta.get("part_ring_p") or {}).items()}
+        if parts:
+            like["part_rings"] = parts
+        if meta.get("dispatched_idx"):
+            like["dispatched"] = jnp.zeros(
+                (len(meta["dispatched_idx"]), int(meta["psize"])), dtype=dt)
+        return like
+
+    @classmethod
+    def from_state(cls, tree: Dict[str, Any], meta: Dict[str, Any],
+                   template: Pytree) -> "ClientPool":
+        pool = cls(int(meta["n"]), template,
+                   ring_depth=int(meta["ring_depth"]))
+        assert pool.psize == int(meta["psize"]), (
+            f"checkpoint pool covers {meta['psize']} params, template has "
+            f"{pool.psize}")
+
+        def _floats(vals):
+            return np.array([np.nan if v is None else float(v)
+                             for v in vals], dtype=np.float64)
+
+        pool.res_mask = np.asarray(meta["res_mask"], dtype=bool)
+        pool.versions = np.asarray(meta["versions"], dtype=np.int64)
+        pool.last_refresh_arr = np.asarray(meta["last_refresh"],
+                                           dtype=np.int64)
+        pool.baseline_arr = _floats(meta["baseline"])
+        if meta["has_residuals"]:
+            pool.residuals = jnp.asarray(tree["residuals"])
+        if meta["ring_p"] is not None:
+            pool.ring.buf = jnp.asarray(tree["ring"]["buf"])
+            pool.ring.cursor = np.asarray(
+                tree["ring"]["cursor"]).astype(np.int32)
+            pool.ring.count = np.asarray(
+                tree["ring"]["count"]).astype(np.int32)
+        for name in (meta.get("part_ring_p") or {}):
+            store = RingStore(pool.n, pool.ring_depth)
+            entry = tree["part_rings"][name]
+            store.buf = jnp.asarray(entry["buf"])
+            store.cursor = np.asarray(entry["cursor"]).astype(np.int32)
+            store.count = np.asarray(entry["count"]).astype(np.int32)
+            pool.part_rings[name] = store
+        for name, vals in (meta.get("part_last_refresh") or {}).items():
+            pool.part_last_refresh_arr[name] = np.asarray(vals,
+                                                          dtype=np.int64)
+        for name, vals in (meta.get("part_baseline") or {}).items():
+            pool.part_baseline_arr[name] = _floats(vals)
+        for k, ci in enumerate(meta.get("dispatched_idx") or []):
+            pool.dispatched[int(ci)] = pool.unravel(tree["dispatched"][k])
+        return pool

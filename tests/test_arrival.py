@@ -1,0 +1,188 @@
+"""Vectorized arrival engine ≡ heapq oracle (DESIGN.md §12.2).
+
+The engine's contract is *order-exactness*: ``pop_k`` returns exactly what
+K sequential ``heapq.heappop`` calls on ``(time, seq, ci)`` tuples would —
+same clients, same order, same float64 times — across random populations,
+latency models, and interleaved push/pop schedules. The property test
+drives both implementations through identical random schedules (pushes via
+``LatencyModel.sample`` so real latency streams, ties included, are
+exercised); unit tests pin the edge cases (FIFO ties, boundary ties at the
+K-th time, checkpoint round-trip, the device-side ``pop_k_device``
+agreement)."""
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:                       # pragma: no cover
+    from _hypothesis_stub import hypothesis, st
+
+from repro.core.arrival import ArrivalEngine, pop_k_device
+from repro.core.scheduler import LatencyModel
+
+
+class HeapOracle:
+    """The original AsyncBuffered event queue, verbatim semantics."""
+
+    def __init__(self):
+        self.heap = []
+        self.seq = 0
+
+    def push(self, ci, t):
+        heapq.heappush(self.heap, (t, self.seq, ci))
+        self.seq += 1
+
+    def pop_k(self, k):
+        out = []
+        for _ in range(k):
+            t, _, ci = heapq.heappop(self.heap)
+            out.append((t, ci))
+        return out
+
+
+def _drive(n, buffer_k, lat: LatencyModel, n_rounds: int):
+    """Run the FedBuff dispatch discipline (all clients at t=0, drain K,
+    re-dispatch exactly those K) through both queues in lockstep and
+    return both pop traces."""
+    eng, orc = ArrivalEngine(n), HeapOracle()
+    clock_e = clock_o = 0.0
+    dispatch = {ci: 0 for ci in range(n)}
+    for ci in range(n):
+        t = lat.sample(ci, dispatch[ci], n)
+        eng.push(ci, clock_e + t)
+        orc.push(ci, clock_o + t)
+    trace_e, trace_o = [], []
+    for _ in range(n_rounds):
+        k = min(buffer_k, eng.in_flight())
+        pe, po = eng.pop_k(k), orc.pop_k(k)
+        trace_e.append(pe)
+        trace_o.append(po)
+        clock_e = max([clock_e] + [t for t, _ in pe])
+        clock_o = max([clock_o] + [t for t, _ in po])
+        for _, ci in po:
+            dispatch[ci] += 1
+            t = lat.sample(ci, dispatch[ci], n)
+            eng.push(ci, clock_e + t)
+            orc.push(ci, clock_o + t)
+    return trace_e, trace_o
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    n=st.integers(min_value=1, max_value=40),
+    buffer_k=st.integers(min_value=1, max_value=40),
+    jitter=st.floats(min_value=0.0, max_value=0.9),
+    straggler_frac=st.floats(min_value=0.0, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_engine_matches_heap_oracle(n, buffer_k, jitter, straggler_frac,
+                                    seed):
+    lat = LatencyModel(base=1.0, jitter=jitter,
+                       straggler_frac=straggler_frac, seed=seed)
+    trace_e, trace_o = _drive(n, min(buffer_k, n), lat, n_rounds=6)
+    assert trace_e == trace_o   # same clients, same order, same float64 t
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    n=st.integers(min_value=2, max_value=30),
+    buffer_k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_engine_staleness_weights_match(n, buffer_k, seed):
+    """Equal pop sets at equal versions ⇒ equal staleness vectors ⇒ equal
+    staleness weights — asserted through the actual weight function."""
+    from repro.core.aggregate import staleness_weights
+    lat = LatencyModel(base=1.0, jitter=0.4, seed=seed)
+    trace_e, trace_o = _drive(n, min(buffer_k, n), lat, n_rounds=5)
+    version = {ci: 0 for ci in range(n)}
+    for r, (pe, po) in enumerate(zip(trace_e, trace_o)):
+        stales_e = [r - version[ci] for _, ci in pe]
+        stales_o = [r - version[ci] for _, ci in po]
+        we = staleness_weights([1.0] * len(pe), stales_e, 0.5)
+        wo = staleness_weights([1.0] * len(po), stales_o, 0.5)
+        assert we == wo
+        for _, ci in po:
+            version[ci] = r + 1
+
+
+# ---------------------------------------------------------------------
+# deterministic unit tests (always run, hypothesis installed or not)
+# ---------------------------------------------------------------------
+def test_fifo_tie_break():
+    """Equal arrival times pop in dispatch (seq) order — the heap's FIFO
+    tie-break, which staleness weighting relies on."""
+    eng = ArrivalEngine(4)
+    for ci in [2, 0, 3, 1]:             # seq order ≠ index order
+        eng.push(ci, 1.0)
+    assert eng.pop_k(4) == [(1.0, 2), (1.0, 0), (1.0, 3), (1.0, 1)]
+
+
+def test_boundary_tie_at_kth_time():
+    """Ties AT the K-th smallest time resolve by seq, not index."""
+    eng = ArrivalEngine(5)
+    eng.push(4, 5.0)     # seq 0
+    eng.push(3, 5.0)     # seq 1
+    eng.push(2, 5.0)     # seq 2
+    eng.push(0, 1.0)     # seq 3
+    eng.push(1, 9.0)     # seq 4
+    # k=2: times {1.0, 5.0×3, 9.0}; the 5.0 tie at the boundary goes to
+    # the earliest-dispatched client (4), not the smallest index
+    assert eng.pop_k(2) == [(1.0, 0), (5.0, 4)]
+    assert eng.pop_k(2) == [(5.0, 3), (5.0, 2)]
+    assert eng.in_flight() == 1
+
+
+def test_push_many_matches_sequential_pushes():
+    a, b = ArrivalEngine(6), ArrivalEngine(6)
+    cis, ts = [4, 1, 5], [3.0, 2.0, 2.0]
+    for ci, t in zip(cis, ts):
+        a.push(ci, t)
+    b.push_many(cis, ts)
+    assert a.pop_k(3) == b.pop_k(3)
+    assert a.next_seq == b.next_seq
+
+
+def test_double_dispatch_asserts():
+    eng = ArrivalEngine(2)
+    eng.push(0, 1.0)
+    with pytest.raises(AssertionError):
+        eng.push(0, 2.0)
+    with pytest.raises(AssertionError):
+        eng.pop_k(2)                      # only one in flight
+
+
+def test_entries_round_trip():
+    """entries()/from_entries round-trips the same JSON shape AsyncBuffered
+    persists — heap- and vector-engine checkpoints are interchangeable."""
+    eng = ArrivalEngine(5)
+    eng.push_many([3, 0, 4], [2.0, 1.0, 2.0])
+    eng.pop_k(1)
+    entries = eng.entries()
+    assert all(len(e) == 3 for e in entries)
+    clone = ArrivalEngine.from_entries(5, entries, eng.next_seq)
+    assert clone.pop_k(2) == eng.pop_k(2)
+    assert clone.next_seq == eng.next_seq
+
+
+def test_pop_k_device_agrees_with_host_engine():
+    """The jit-native first-K (serve pipeline) selects the same clients in
+    the same order as the exact host engine when times are f32-exact."""
+    rng = np.random.RandomState(0)
+    n, k = 64, 9
+    times = rng.randint(0, 8, size=n).astype(np.float64)  # force ties
+    eng = ArrivalEngine(n)
+    order = rng.permutation(n)
+    for ci in order:
+        eng.push(int(ci), float(times[ci]))
+    seqs = eng.seqs.copy()
+    d_times, d_idx = pop_k_device(
+        jnp.asarray(eng.times, jnp.float32),
+        jnp.asarray(seqs, jnp.int32), k)
+    host = eng.pop_k(k)
+    assert [int(ci) for _, ci in host] == [int(i) for i in d_idx]
+    assert [float(t) for t, _ in host] == [float(t) for t in d_times]

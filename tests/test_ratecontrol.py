@@ -440,14 +440,14 @@ def test_rate_control_checkpoint_bitexact_resume(tmp_path):
     hist_full = full.run()
     first, rc_first = mk(1)
     first.run()
-    assert rc_first._rung == [1, 1]         # the switch happened pre-save
+    assert list(rc_first._rung) == [1, 1]         # the switch happened pre-save
     path = os.path.join(tmp_path, "rc.npz")
     first.save_state(path)
 
     resumed, rc_res = mk(1)
-    assert rc_res._rung == [0, 0]           # fresh ladder starts at rung 0
+    assert list(rc_res._rung) == [0, 0]           # fresh ladder starts at rung 0
     assert resumed.load_state(path) == 1
-    assert rc_res._rung == [1, 1]
+    assert list(rc_res._rung) == [1, 1]
     for ci in range(2):
         assert resumed.compressors[ci] is rc_res._comps[ci][1]
         # the refit rung-1 params came back, not the fresh init
@@ -479,8 +479,8 @@ def test_byte_budget_prices_cooldown_clients_into_the_plan():
     run.run()                      # snapshots exist for both clients now
     # put client 0 on the identity rung, frozen by a fresh switch; keep
     # client 1 movable on the cheapest rung
-    rc._rung = [2, 0]
-    rc._last_switch = [1, -(10 ** 9)]
+    rc._rung = np.array([2, 0])
+    rc._last_switch = np.array([1, -(10 ** 9)])
     moves = rc.plan(run, 2, [0, 1])
     # client 0's rung-2 spend leaves exactly costs[1] for client 1: the
     # plan may lift it to rung 1 but NOT to rung 2 (which would fit only

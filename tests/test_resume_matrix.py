@@ -40,6 +40,9 @@ def _scheduler(kind):
         "sampled": lambda: SampledSync(cohort=2),
         "async": lambda: AsyncBuffered(
             buffer_k=2, latency=LatencyModel(jitter=0.3)),
+        "async-vector": lambda: AsyncBuffered(
+            buffer_k=2, latency=LatencyModel(jitter=0.3),
+            engine="vector"),
     }[kind]()
 
 
@@ -81,7 +84,7 @@ def _compressors(layout):
     return [QuantizeCompressor(bits=8) for _ in range(N_CLIENTS)]
 
 
-def _mk(sched, rc, layout, n_rounds, data, ev):
+def _mk(sched, rc, layout, n_rounds, data, ev, soa=False):
     cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update",
                    error_feedback=(rc == "none"))
     controller = _controller(rc, layout)
@@ -89,23 +92,21 @@ def _mk(sched, rc, layout, n_rounds, data, ev):
         MNIST_CLASSIFIER, data, cfg,
         compressors=(None if controller is not None
                      else _compressors(layout)),
-        eval_data=ev, scheduler=_scheduler(sched), ratecontrol=controller)
+        eval_data=ev, scheduler=_scheduler(sched), ratecontrol=controller,
+        soa_state=soa)
 
 
-@pytest.mark.parametrize("layout", ["flat", "partitioned"])
-@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
-@pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
-def test_resume_matrix_bytes_and_trajectory(sched, rc, layout, tmp_path):
+def _run_cell(sched, rc, layout, tmp_path, soa=False):
     data, ev = _data()
-    full = _mk(sched, rc, layout, 2, data, ev)
+    full = _mk(sched, rc, layout, 2, data, ev, soa=soa)
     hist_full = full.run()
 
-    first = _mk(sched, rc, layout, 1, data, ev)
+    first = _mk(sched, rc, layout, 1, data, ev, soa=soa)
     first.run()
     path = os.path.join(tmp_path, "ckpt.npz")
     first.save_state(path)
 
-    resumed = _mk(sched, rc, layout, 1, data, ev)
+    resumed = _mk(sched, rc, layout, 1, data, ev, soa=soa)
     assert resumed.load_state(path) == 1
     hist_resumed = resumed.run()
 
@@ -126,3 +127,20 @@ def test_resume_matrix_bytes_and_trajectory(sched, rc, layout, tmp_path):
         assert a.staleness == b.staleness
         assert a.sim_time == b.sim_time
         assert a.global_metrics == b.global_metrics
+
+
+@pytest.mark.parametrize("layout", ["flat", "partitioned"])
+@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
+@pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
+def test_resume_matrix_bytes_and_trajectory(sched, rc, layout, tmp_path):
+    _run_cell(sched, rc, layout, tmp_path)
+
+
+@pytest.mark.parametrize("layout", ["flat", "partitioned"])
+@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
+@pytest.mark.parametrize("sched", ["sampled", "async-vector"])
+def test_resume_matrix_soa(sched, rc, layout, tmp_path):
+    """The §12.1/§12.2 cells: struct-of-arrays client state (ring
+    snapshots + residual block round-trip through the checkpoint) and the
+    vectorized arrival engine, under the same bytes+trajectory bar."""
+    _run_cell(sched, rc, layout, tmp_path, soa=True)

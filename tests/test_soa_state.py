@@ -1,0 +1,273 @@
+"""Struct-of-arrays client state ≡ eager ClientState (DESIGN.md §12.1).
+
+Three layers of guarantees:
+
+* **view semantics** — ``ClientPool``'s per-client views reproduce the
+  exact ``list``/``dict`` discipline the lifecycle/ratecontrol snapshot
+  code uses (append + ``del v[:-k]`` rings, get-with-default scalars);
+* **differential runs** — a ``FederatedRun(soa_state=True)`` with the
+  vectorized arrival engine matches the eager heap-oracle run in BYTES
+  and TRAJECTORY, bit-exact, across schedulers (the ISSUE 7 acceptance
+  gate at small populations);
+* **checkpoint round-trip** — pool state (ring contents + cursors +
+  residual block) survives ``save_federated_state``, including restoring
+  a heap-engine checkpoint into a vector-engine run.
+
+Plus the dispatch byte-accounting satellite: ``AsyncBuffered._dispatch``
+now computes ``tree_bytes(global_params)`` once per model version, not
+once per client per dispatch — counted via monkeypatch, with byte totals
+asserted unchanged."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import MNIST_CLASSIFIER
+from repro.core import scheduler as scheduler_mod
+from repro.core import (AsyncBuffered, ClientPool, FLConfig, FederatedRun,
+                        LatencyModel, QuantizeCompressor, SampledSync)
+from repro.core.soa import RingStore, RingView
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+from repro.models.classifiers import init_classifier
+
+N_CLIENTS = 5
+TMPL = init_classifier(jax.random.PRNGKey(0), MNIST_CLASSIFIER)
+
+
+def _data(n=N_CLIENTS):
+    train, ev = train_eval_split(mnist_like(0, 96), 32)
+    return uniform_partition(0, train, n), ev
+
+
+def _async_sched(engine):
+    return AsyncBuffered(
+        buffer_k=2,
+        latency=LatencyModel(base=1.0, jitter=0.3, straggler_frac=0.3,
+                             seed=5),
+        engine=engine)
+
+
+def _records_equal(a, b):
+    assert a.participants == b.participants
+    assert a.staleness == b.staleness
+    assert a.bytes_up == b.bytes_up
+    assert a.bytes_up_raw == b.bytes_up_raw
+    assert a.bytes_down == b.bytes_down
+    assert a.bytes_decoder == b.bytes_decoder
+    assert a.sim_time == b.sim_time
+    assert a.global_metrics == b.global_metrics
+
+
+def _params_equal(x, y):
+    for a, b in zip(jax.tree_util.tree_leaves(x),
+                    jax.tree_util.tree_leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# =====================================================================
+# view semantics
+# =====================================================================
+def test_ring_view_list_discipline():
+    """append + ``del v[:-k]`` (the one pattern lifecycle/ratecontrol use)
+    matches a plain list through overwrite wraparound."""
+    store = RingStore(2, depth=3)
+    view, oracle = RingView(store, 1), []
+    for i in range(7):
+        view.append(jnp.full(4, float(i)))
+        oracle.append(np.full(4, float(i)))
+        del oracle[:-3]
+        assert len(view) == len(oracle)
+        for j in range(len(oracle)):
+            np.testing.assert_array_equal(np.asarray(view[j]), oracle[j])
+        np.testing.assert_array_equal(np.asarray(view[-1]), oracle[-1])
+    # stacking order (what _refit consumes) matches too
+    np.testing.assert_array_equal(
+        np.asarray(jnp.stack(list(view))), np.stack(oracle))
+    del view[:]                        # drop-everything edge case
+    assert len(view) == 0 and not view
+
+
+def test_client_view_scalars_and_part_dicts():
+    pool = ClientPool(3, TMPL, ring_depth=4)
+    v = pool[2]
+    assert v.residual is None and v.ae_baseline is None
+    assert v.last_refresh == -1 and v.version == 0
+    v.residual = TMPL
+    _params_equal(v.residual, TMPL)
+    v.residual = None
+    assert v.residual is None
+    v.ae_baseline = 0.25
+    v.version, v.last_refresh = 7, 3
+    assert (v.ae_baseline, v.version, v.last_refresh) == (0.25, 7, 3)
+    # part_* dict discipline: setdefault-append rings, sentinel scalars
+    ring = v.part_snapshots.setdefault("dense0", [])
+    ring.append(jnp.ones(6))
+    assert len(v.part_snapshots["dense0"]) == 1
+    assert v.part_snapshots.get("missing", []) == []
+    assert "dense0" in v.part_snapshots and "missing" not in v.part_snapshots
+    # a different client's lane is independent
+    assert pool[0].part_snapshots.get("dense0") is None
+    v.part_last_refresh["dense0"] = 5
+    assert v.part_last_refresh.get("dense0", -1) == 5
+    assert v.part_last_refresh.get("other", -1) == -1
+    v.part_baseline["dense0"] = None
+    assert v.part_baseline.get("dense0") is None
+    v.part_baseline["dense0"] = 0.5
+    assert v.part_baseline["dense0"] == 0.5
+    # pool container surface
+    assert len(pool) == 3 and len(list(pool)) == 3
+
+
+def test_gather_scatter_residual_rows():
+    pool = ClientPool(4, TMPL, ring_depth=2)
+    rows = jnp.stack([jnp.full(pool.psize, float(i)) for i in (1, 3)])
+    pool.scatter_residuals([1, 3], rows)
+    got, mask = pool.gather_residuals([0, 1, 3])
+    assert list(mask) == [False, True, True]
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(rows[0]))
+    # view reads the scattered row back as a model-shaped pytree
+    flat = np.concatenate([np.asarray(x).ravel() for x in
+                           jax.tree_util.tree_leaves(pool[3].residual)])
+    assert set(np.unique(flat)) == {3.0}
+
+
+# =====================================================================
+# differential: SoA + vector engine ≡ eager + heap oracle
+# =====================================================================
+@pytest.mark.parametrize("sched", ["async", "sampled"])
+def test_soa_vector_matches_eager_heap(sched):
+    data, ev = _data()
+
+    def mk(soa):
+        cfg = FLConfig(n_rounds=4, local_epochs=1, error_feedback=True,
+                       seed=3)
+        s = (_async_sched("vector" if soa else "heap") if sched == "async"
+             else SampledSync(cohort=3))
+        return FederatedRun(
+            MNIST_CLASSIFIER, data, cfg, eval_data=ev, scheduler=s,
+            compressors=[QuantizeCompressor(bits=8)
+                         for _ in range(N_CLIENTS)],
+            soa_state=soa)
+
+    eager = mk(False)
+    hist_e = eager.run()
+    pooled = mk(True)
+    hist_p = pooled.run()
+    for a, b in zip(hist_e, hist_p):
+        _records_equal(a, b)
+    _params_equal(eager.global_params, pooled.global_params)
+    # residuals (the per-client compressor state) match too
+    for ce, cp in zip(eager.clients, pooled.clients):
+        if ce.residual is None:
+            assert cp.residual is None
+        else:
+            _params_equal(ce.residual, cp.residual)
+
+
+# =====================================================================
+# checkpoint round-trip
+# =====================================================================
+@pytest.mark.parametrize("save_engine,load_engine",
+                         [("vector", "vector"), ("heap", "vector"),
+                          ("vector", "heap")])
+def test_soa_resume_and_engine_cross_restore(save_engine, load_engine,
+                                             tmp_path):
+    """SoA checkpoints resume bit-exact, including across engines (both
+    serialize the same event-queue JSON shape)."""
+    data, ev = _data()
+
+    def mk(n_rounds, engine):
+        cfg = FLConfig(n_rounds=n_rounds, local_epochs=1,
+                       error_feedback=True, seed=3)
+        return FederatedRun(MNIST_CLASSIFIER, data, cfg, eval_data=ev,
+                            scheduler=_async_sched(engine), soa_state=True)
+
+    full = mk(4, save_engine)
+    hist_full = full.run()
+
+    first = mk(2, save_engine)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+
+    resumed = mk(2, load_engine)
+    assert resumed.load_state(path) == 2
+    assert isinstance(resumed.clients, ClientPool)
+    hist_resumed = resumed.run()
+    for a, b in zip(hist_full[2:], hist_resumed):
+        _records_equal(a, b)
+    _params_equal(full.global_params, resumed.global_params)
+
+
+def test_pool_state_round_trip_preserves_rings_and_scalars():
+    pool = ClientPool(3, TMPL, ring_depth=3)
+    for i in range(5):                       # wraps the depth-3 ring
+        pool[1].snapshots.append(jnp.full(4, float(i)))
+    pool[1].residual = TMPL
+    pool[2].dispatched = TMPL
+    pool[0].part_snapshots.setdefault("g", []).append(jnp.ones(2))
+    pool[0].part_last_refresh["g"] = 4
+    pool[0].part_baseline["g"] = 0.125
+    pool[2].ae_baseline = None
+    pool[1].version = 9
+    tree, meta = pool.state()
+    clone = ClientPool.from_state(tree, meta, TMPL)
+    assert len(clone[1].snapshots) == 3      # depth-capped, newest kept
+    np.testing.assert_array_equal(np.asarray(clone[1].snapshots[-1]),
+                                  np.full(4, 4.0))
+    np.testing.assert_array_equal(np.asarray(clone[1].snapshots[0]),
+                                  np.full(4, 2.0))
+    _params_equal(clone[1].residual, TMPL)
+    _params_equal(clone[2].dispatched, TMPL)
+    assert clone[0].part_last_refresh["g"] == 4
+    assert clone[0].part_baseline["g"] == 0.125
+    assert clone[2].ae_baseline is None
+    assert clone[1].version == 9
+    assert clone[0].residual is None and clone[0].dispatched is None
+
+
+# =====================================================================
+# satellite: dispatch byte-accounting cache
+# =====================================================================
+def test_dispatch_broadcast_bytes_cached_per_version():
+    """tree_bytes(global_params) is computed once per model version, not
+    once per client per dispatch — and the recorded byte totals are
+    identical to the uncached eager run."""
+    data, ev = _data()
+
+    def mk():
+        cfg = FLConfig(n_rounds=3, local_epochs=1, seed=3)
+        return FederatedRun(MNIST_CLASSIFIER, data, cfg, eval_data=ev,
+                            scheduler=_async_sched("heap"))
+
+    calls = {"n": 0}
+    real = scheduler_mod.tree_bytes
+
+    def counting(tree):
+        calls["n"] += 1
+        return real(tree)
+
+    scheduler_mod.tree_bytes = counting
+    try:
+        run = mk()                      # ctor dispatches all N clients
+        reset_calls = calls["n"]
+        hist = run.run()
+    finally:
+        scheduler_mod.tree_bytes = real
+    # reset: N dispatches share ONE tree_bytes call (version 0)
+    assert reset_calls == 1
+    # each round: one call per new version (the re-dispatch batch) plus
+    # the scheduler-independent model_bytes probes — never per client.
+    # 3 rounds × (1 cached-miss + ...) stays far under N per round.
+    assert calls["n"] - reset_calls <= 2 * len(hist)
+
+    # byte totals equal a fresh (uninstrumented) run's
+    ref = mk()
+    ref_hist = ref.run()
+    for a, b in zip(hist, ref_hist):
+        assert a.bytes_down == b.bytes_down
+        assert a.bytes_down_raw == b.bytes_down_raw
+        assert a.bytes_up == b.bytes_up
