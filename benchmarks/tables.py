@@ -826,6 +826,126 @@ def table_fl_serve() -> List[Row]:
     return rows
 
 
+# =====================================================================
+# composable codec stacks (DESIGN.md §13) — chained server aggregation
+# =====================================================================
+def table_fl_codec_stacks() -> List[Row]:
+    """Chain stacks on the fused server path, bare vs chained cohorts at
+    8/64 clients. ``q8`` is the bare pointwise baseline; ``topk_q8`` is the
+    scatter-terminal chain (one weighted scatter-add, dense rows never
+    built) against its sequential per-client oracle ``topk_q8_seq``;
+    ``ae_q8_kernel`` is the kernel-terminal chain (quantized latents →
+    fused Pallas decode→aggregate); ``mixed_grouped`` reduces a two-rung
+    chain-ladder cohort through the one-dispatch grouped round vs the
+    group-by-spec sequential loop ``mixed_seq``. ``derived`` reports the
+    stack's wire size as a fraction of raw — the uplink the chain buys."""
+    from repro.core import codec, normalize_weights, partition
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
+    from repro.core.scheduler import EncodedUpdate
+
+    model = (1 << 20) if FULL else (1 << 15)
+    raw_bytes = model * 4
+    rows: List[Row] = []
+
+    q8 = codec.QuantizeSpec(size=model, bits=8, block=256)
+    k = model // 20
+    topk_q8 = codec.ChainSpec((
+        codec.TopKSpec(size=model, k=k),
+        codec.QuantizeSpec(size=k, bits=8, block=64)))
+    cfg_hi = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
+    cfg_lo = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=4)
+    prm_hi = init_chunked_ae(jax.random.PRNGKey(7), cfg_hi)
+    prm_lo = init_chunked_ae(jax.random.PRNGKey(8), cfg_lo)
+
+    def ae_chain(cfg):
+        spec = codec.ChunkedAESpec(size=model, cfg=cfg, use_kernel=True)
+        n_lat = spec.n_chunks * cfg.latent_chunk
+        return codec.ChainSpec((
+            spec, codec.QuantizeSpec(size=n_lat, bits=8, block=64)))
+
+    ae_hi, ae_lo = ae_chain(cfg_hi), ae_chain(cfg_lo)
+
+    def frac(spec, params=None):
+        return codec.wire_bytes(spec, params) / raw_bytes
+
+    for cohort in (8, 64):
+        flats = [jax.random.normal(jax.random.PRNGKey(i), (model,))
+                 for i in range(cohort)]
+        weights = normalize_weights([float(i + 1) for i in range(cohort)])
+        nw = jnp.asarray(weights, jnp.float32)
+
+        def agg_row(name, spec, params, wire_frac):
+            stacked = codec.stack_payloads(
+                [codec.encode(spec, params, f) for f in flats])
+
+            def fn():
+                return jax.block_until_ready(codec.decode_and_aggregate(
+                    spec, params, stacked, nw))
+
+            rows.append((f"{name}_c{cohort}", _timeit_min(fn),
+                         f"wire {wire_frac:.3f}x raw"))
+            return stacked
+
+        agg_row("q8", q8, None, frac(q8))
+        tk_stacked = agg_row("topk_q8", topk_q8, None, frac(topk_q8))
+        agg_row("ae_q8_kernel", ae_hi, (prm_hi, None),
+                frac(ae_hi, (prm_hi, None)))
+
+        # sequential per-client oracle for the scatter-terminal chain
+        tk_payloads = [codec.encode(topk_q8, None, f) for f in flats]
+
+        def topk_seq():
+            out = None
+            for wi, pl in zip(weights, tk_payloads):
+                c = jnp.float32(wi) * codec.decode(topk_q8, None, pl)
+                out = c if out is None else out + c
+            return jax.block_until_ready(out)
+
+        rows.append((f"topk_q8_seq_c{cohort}", _timeit_min(topk_seq),
+                     f"wire {frac(topk_q8):.3f}x raw"))
+        del tk_stacked
+
+        # two-rung chain-ladder cohort: grouped one-dispatch vs group-by-
+        # spec sequential loop (the scheduler's two heterogeneous paths)
+        mixed = [EncodedUpdate(
+            payload=codec.encode(ae_hi if i % 2 else ae_lo,
+                                 ((prm_hi if i % 2 else prm_lo), None), f),
+            spec=(ae_hi if i % 2 else ae_lo),
+            params=((prm_hi if i % 2 else prm_lo), None),
+            weight=weights[i], stats={}, metrics={})
+            for i, f in enumerate(flats)]
+
+        def mixed_grouped():
+            return jax.block_until_ready(
+                partition.grouped_flat_server_aggregate(
+                    mixed, weights, None))
+
+        def mixed_seq():
+            out = None
+            groups: dict = {}
+            for i, e in enumerate(mixed):
+                groups.setdefault(e.spec, []).append(i)
+            for spec, idx in groups.items():
+                s_g = sum(weights[i] for i in idx)
+                w_g = jnp.asarray([weights[i] / s_g for i in idx],
+                                  jnp.float32)
+                stacked = codec.stack_payloads(
+                    [mixed[i].payload for i in idx])
+                part = codec.decode_and_aggregate(
+                    spec, mixed[idx[0]].params, stacked, w_g)
+                contrib = jnp.float32(s_g) * part
+                out = contrib if out is None else out + contrib
+            return jax.block_until_ready(out)
+
+        mixed_frac = (frac(ae_hi, (prm_hi, None))
+                      + frac(ae_lo, (prm_lo, None))) / 2
+        rows.append((f"mixed_grouped_c{cohort}", _timeit_min(mixed_grouped),
+                     f"wire {mixed_frac:.3f}x raw"))
+        rows.append((f"mixed_seq_c{cohort}", _timeit_min(mixed_seq),
+                     f"wire {mixed_frac:.3f}x raw"))
+    return rows
+
+
 ROOFLINES = {
     "fl_decode_agg": _roofline_fl_decode_agg,
     "fl_partition": _roofline_fl_partition,
@@ -846,6 +966,7 @@ ALL_TABLES = [
     ("ae_train", table_ae_train),
     ("fl_rate_control", table_fl_rate_control),
     ("fl_partition", table_fl_partition),
+    ("fl_codec_stacks", table_fl_codec_stacks),
     ("fl_serve", table_fl_serve),
     ("roofline_summary", table_roofline_summary),
 ]

@@ -5,16 +5,72 @@ are AE-compressed every communication round; the sawtooth accuracy/loss
 pattern (dip after each aggregation) shows federation is really happening
 while the pipe carries only latents.
 
+``--stacks`` runs the composable-codec-stack comparison instead
+(DESIGN.md §13): q8 vs topk→q8 vs topk→AE→q8 on a Dirichlet label-skew
+split, printing an accuracy-vs-uplink table — the FedZip-direction
+sparsify-then-compress stacks trade accuracy for steep uplink cuts.
+
 Run: PYTHONPATH=src python examples/fl_color_imbalance.py [--rounds N]
+     PYTHONPATH=src python examples/fl_color_imbalance.py --stacks
 """
 import argparse
 
 import jax
 
 from repro.configs.paper import CIFAR_CLASSIFIER, cifar_ae_for
-from repro.core import FCAECompressor, FLConfig, FederatedRun, run_prepass
-from repro.data.pipeline import cifar_like, color_imbalance_split
+from repro.core import (ChainCompressor, ChunkedAECompressor,
+                        ChunkedAEConfig, FCAECompressor, FLConfig,
+                        FederatedRun, QuantizeCompressor, TopKCompressor,
+                        init_chunked_ae, run_prepass)
+from repro.data.pipeline import (cifar_like, color_imbalance_split,
+                                 dirichlet_partition, train_eval_split)
 from repro.models.classifiers import init_classifier, n_params
+
+
+def run_stacks(args):
+    """Codec-stack comparison on a Dirichlet non-IID split: the same
+    federation under three uplink codecs — blockwise q8, FedZip-style
+    topk→q8, and the paper-direction topk→AE→q8 chain."""
+    n_clients = 4
+    train, eval_data = train_eval_split(
+        cifar_like(0, args.n * n_clients), max(32, args.n // 2))
+    datasets = dirichlet_partition(0, train, n_clients, alpha=0.5,
+                                   min_per_client=8)
+    P = n_params(init_classifier(jax.random.PRNGKey(0), CIFAR_CLASSIFIER))
+    ccfg = ChunkedAEConfig(chunk_size=256, hidden=(64,), latent_chunk=16)
+    ae_params = init_chunked_ae(jax.random.PRNGKey(1), ccfg)
+    print(f"== codec stacks on Dirichlet(0.5) split, {n_clients} clients, "
+          f"CIFAR-CNN {P} params ==")
+
+    def stacks():
+        return {
+            "q8": lambda: QuantizeCompressor(bits=8),
+            "topk->q8": lambda: ChainCompressor(
+                [TopKCompressor(fraction=0.1),
+                 QuantizeCompressor(bits=8, block=64)]),
+            "topk->ae->q8": lambda: ChainCompressor(
+                [TopKCompressor(fraction=0.05),
+                 ChunkedAECompressor(ae_params, ccfg),
+                 QuantizeCompressor(bits=8, block=64)]),
+        }
+
+    rows = []
+    for name, mk in stacks().items():
+        run = FederatedRun(
+            CIFAR_CLASSIFIER, datasets,
+            FLConfig(n_rounds=args.rounds, local_epochs=args.local_epochs,
+                     payload="update", error_feedback=True),
+            compressors=[mk() for _ in range(n_clients)],
+            eval_data=eval_data)
+        hist = run.run()
+        totals = run.total_bytes()
+        rows.append((name, hist[-1].global_metrics["accuracy"],
+                     totals["bytes_up"], totals["effective_ratio"]))
+
+    print(f"\n{'stack':>14} {'final_acc':>10} {'uplink_bytes':>13} "
+          f"{'ratio':>7}")
+    for name, acc, up, ratio in rows:
+        print(f"{name:>14} {acc:>10.3f} {up:>13.3e} {ratio:>6.0f}x")
 
 
 def main():
@@ -22,7 +78,12 @@ def main():
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--local-epochs", type=int, default=1)
     ap.add_argument("--n", type=int, default=256, help="samples/collab")
+    ap.add_argument("--stacks", action="store_true",
+                    help="codec-stack comparison on a Dirichlet split")
     args = ap.parse_args()
+    if args.stacks:
+        run_stacks(args)
+        return
 
     P = n_params(init_classifier(jax.random.PRNGKey(0), CIFAR_CLASSIFIER))
     ae_cfg = cifar_ae_for(P)

@@ -10,17 +10,25 @@ from repro.core.aggregate import (  # noqa: F401
     weighted_mean_stacked,
 )
 from repro.core.codec import (  # noqa: F401
+    ChainSpec,
     ChunkedAESpec,
     ComposedSpec,
+    EntropySpec,
     FCAESpec,
     IdentitySpec,
+    KMeansSpec,
     QuantizeSpec,
     TopKSpec,
     ae_spec,
+    composed_chain,
     decode_and_aggregate,
     decode_and_aggregate_sharded,
     decode_batched,
+    is_shape_static,
+    measured_bytes,
     stack_payloads,
+    stage_ops,
+    stage_out_size,
     wire_bytes,
 )
 from repro.core import codec  # noqa: F401
@@ -68,11 +76,13 @@ from repro.core.ratecontrol import (  # noqa: F401
     partition_ladder,
 )
 from repro.core.compressor import (  # noqa: F401
+    ChainCompressor,
     ChunkedAECompressor,
     ComposedCompressor,
     Compressor,
     FCAECompressor,
     IdentityCompressor,
+    KMeansCompressor,
     PartitionedCompressor,
     QuantizeCompressor,
     TopKCompressor,

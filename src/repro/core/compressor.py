@@ -19,9 +19,12 @@ Implementations:
 * Identity           — baseline (no compression)
 * Quantize (int8/4)  — the traditional baseline the paper cites (FedPAQ et al.)
 * TopK               — DGC/STC-style magnitude sparsification baseline
+* KMeans             — FedZip-style clustered quantization (device-fit codebook)
 * FCAE               — paper-faithful full fully-connected AE
 * ChunkedAE          — TPU-scale shared-chunk AE (DESIGN.md §3.2)
 * Composed           — AE then latent quantization ("orthogonal add-on", §4.2)
+* Chain              — composable stage stack (DESIGN.md §13): sub-compressors
+  chained through ``codec.ChainSpec``, optionally entropy-priced
 * Partitioned        — per-layer codec partitions: one sub-compressor per
   named leaf group of the model pytree (DESIGN.md §10)
 
@@ -55,17 +58,23 @@ def tree_bytes(tree: Pytree) -> int:
 _nbytes = tree_bytes
 
 
-def codec_stats(flat: jax.Array, payload: Pytree) -> Dict[str, float]:
+def codec_stats(flat: jax.Array, payload: Pytree,
+                spec: Optional[codec.CodecSpec] = None) -> Dict[str, float]:
     """The Eq.-4 byte accounting for one encoded update — the single
     definition shared by ``Compressor.roundtrip`` and the scheduler's
     ``_encode_local`` (so RoundRecord ratios and roundtrip ratios can never
-    diverge)."""
+    diverge). With ``spec`` the measured-bytes channel (DESIGN.md §13.3) is
+    populated too: equal to ``compressed_bytes`` for shape-static specs, the
+    empirical entropy-coded price for ``EntropySpec``-terminated chains."""
     stats = {
         "original_bytes": float(flat.size * flat.dtype.itemsize),
         "compressed_bytes": float(tree_bytes(payload)),
     }
     stats["compression_ratio"] = (
         stats["original_bytes"] / max(stats["compressed_bytes"], 1.0))
+    stats["measured_bytes"] = stats["compressed_bytes"]
+    if spec is not None and not codec.is_shape_static(spec):
+        stats["measured_bytes"] = float(codec.measured_bytes(spec, payload))
     return stats
 
 
@@ -138,7 +147,7 @@ class Compressor:
         flat, unravel = ravel_pytree(update)
         payload = self.encode(update)
         decoded = self.decode(payload, unravel)
-        return decoded, codec_stats(flat, payload)
+        return decoded, codec_stats(flat, payload, spec=self._spec)
 
 
 class IdentityCompressor(Compressor):
@@ -172,6 +181,101 @@ class TopKCompressor(Compressor):
 
     def spec(self, n: int) -> codec.TopKSpec:
         return codec.TopKSpec(size=n, k=max(1, int(n * self.fraction)))
+
+
+@dataclasses.dataclass
+class KMeansCompressor(Compressor):
+    """FedZip-style clustered quantization: per-update k-means codebook fit
+    on device at encode time; ships (codes, codebook). ``params`` is the
+    optional warm-start codebook — refreshed from each encode is not needed
+    (the codebook travels with the payload), but a checkpointed one seeds
+    Lloyd iterations after restore."""
+
+    k: int = 16
+    iters: int = 8
+    params: Any = None                      # optional {"codebook": (k,)}
+    name: str = "kmeans"
+
+    def __post_init__(self):
+        self.name = f"kmeans{self.k}"
+
+    def spec(self, n: int) -> codec.KMeansSpec:
+        return codec.KMeansSpec(size=n, k=self.k, iters=self.iters)
+
+    def codec_params(self):
+        return self.params
+
+    def set_codec_params(self, restored) -> None:
+        if restored is not None:
+            self.params = restored
+
+
+@dataclasses.dataclass
+class ChainCompressor(Compressor):
+    """Composable codec stack (DESIGN.md §13): ``inner`` sub-compressors
+    chained left-to-right, each stage's spec sized from the previous
+    stage's carry length. ``entropy_coded=True`` appends an
+    ``EntropySpec`` pricing stage, surfacing the empirical entropy-coded
+    wire size on the measured-bytes channel while the shape-static plan
+    price stays dense. ``codec_params()`` is a per-stage tuple (None for
+    stateless stages) cached by identity so the scheduler's shared-params
+    ``is`` fast-path keeps grouping chain cohorts."""
+
+    inner: Any                              # Sequence[Compressor]
+    entropy_coded: bool = False
+    table_bytes_per_symbol: int = 4
+    name: str = "chain"
+
+    def __post_init__(self):
+        self.inner = list(self.inner)
+        assert self.inner, "ChainCompressor needs at least one stage"
+        self.name = "->".join(c.name for c in self.inner)
+        if self.entropy_coded:
+            self.name += "+ec"
+
+    def spec(self, n: int) -> codec.ChainSpec:
+        stages = []
+        size = n
+        for i, comp in enumerate(self.inner):
+            st = comp.spec(size)
+            stages.append(st)
+            if i < len(self.inner) - 1:
+                size = codec.stage_out_size(st)
+                if size is None:
+                    raise ValueError(
+                        f"{comp.name} is terminal-only and cannot precede "
+                        f"{self.inner[i + 1].name} in a chain")
+        if self.entropy_coded:
+            stages.append(codec.EntropySpec(
+                table_bytes_per_symbol=self.table_bytes_per_symbol))
+        return codec.ChainSpec(tuple(stages))
+
+    def codec_params(self):
+        ps = tuple(comp.codec_params() for comp in self.inner)
+        if all(p is None for p in ps):
+            return None
+        cached = getattr(self, "_params_cache", None)
+        if (cached is not None and len(cached) == len(ps)
+                and all(a is b for a, b in zip(cached, ps))):
+            return cached
+        self._params_cache = ps
+        return ps
+
+    def ae_compressor(self):
+        for comp in self.inner:
+            sub = comp.ae_compressor()
+            if sub is not None:
+                return sub
+        return None
+
+    def set_codec_params(self, restored) -> None:
+        if restored is None:
+            return
+        assert len(restored) == len(self.inner), (
+            f"restored chain params have {len(restored)} stages, adapter "
+            f"has {len(self.inner)}")
+        for comp, p in zip(self.inner, restored):
+            comp.set_codec_params(p)
 
 
 @dataclasses.dataclass
@@ -291,7 +395,7 @@ class PartitionedCompressor(Compressor):
             return
         for name, p in restored.items():
             if p is not None:
-                self.compressors[name].ae_compressor().params = p
+                self.compressors[name].set_codec_params(p)
 
     def ae_groups(self) -> Dict[str, Compressor]:
         """The AE-backed sub-compressors, keyed by group name — what the

@@ -67,6 +67,11 @@ class RoundRecord:
     bytes_up: float                    # collaborator→server this round
     bytes_up_raw: float                # uncompressed equivalent
     compression_ratio: float
+    # measured-bytes channel (DESIGN.md §13.3): uplink priced from the
+    # actual encoded payloads. Equal to ``bytes_up`` for shape-static
+    # stacks; below it when an ``EntropySpec`` terminal prices integer
+    # leaves at their Shannon bound instead of the dense eval-shape size.
+    bytes_up_measured: float = 0.0
     # scheduler-layer accounting (DESIGN.md §6.1/§8.3). ``bytes_down`` is
     # the model-sync plane: the global-model broadcast to each participant
     # PLUS any decoder syncs the AE lifecycle shipped this round (both

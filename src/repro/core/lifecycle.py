@@ -123,6 +123,27 @@ class AELifecycle:
             return partitioned(run.compressors[ci]).ae_groups()[name]
         return run.compressors[lane].ae_compressor()
 
+    def _lane_adapter(self, run, lane):
+        """The full wire adapter behind ``lane`` (chains included): what
+        actually encodes this lane's bytes."""
+        from repro.core.compressor import partitioned
+        if isinstance(lane, tuple):
+            ci, name = lane
+            return partitioned(run.compressors[ci]).compressors[name]
+        return run.compressors[lane]
+
+    def _lane_probe(self, run, lane):
+        """Adapter whose roundtrip measures this lane's shipped fidelity:
+        the full chain for chain lanes (drift is end-to-end — the AE stage
+        alone never sees the wire), the AE sub otherwise (identical there:
+        the AE *is* the whole wire path, and keeping it preserves the
+        pre-chain drift trajectories bit-for-bit)."""
+        from repro.core.compressor import ChainCompressor
+        adapter = self._lane_adapter(run, lane)
+        if isinstance(adapter, ChainCompressor):
+            return adapter
+        return self._lane_comp(run, lane)
+
     def _lane_snaps(self, run, lane) -> List[jax.Array]:
         if isinstance(lane, tuple):
             ci, name = lane
@@ -133,7 +154,7 @@ class AELifecycle:
         snaps = self._lane_snaps(run, lane)
         if not snaps:
             return None
-        return self._rel_err(self._lane_comp(run, lane), snaps[-1])
+        return self._rel_err(self._lane_probe(run, lane), snaps[-1])
 
     # ------------------------------------------------------------------
     def end_of_round(self, run, r: int, participants: Sequence[int]
@@ -169,7 +190,8 @@ class AELifecycle:
                             self._lane_baseline(run, lane)
                         continue
                     if self._should_refresh(
-                            r, sub, self._lane_snaps(run, lane),
+                            r, self._lane_probe(run, lane),
+                            self._lane_snaps(run, lane),
                             st.part_last_refresh[name],
                             st.part_baseline.get(name)):
                         todo.append(lane)
@@ -184,9 +206,10 @@ class AELifecycle:
                 if self.ship_initial:
                     bytes_dec += ae.decoder_sync_bytes(comp.codec_params())
                     synced.append(ci)
-                st.ae_baseline = self._baseline(comp, st)
+                st.ae_baseline = self._lane_baseline(run, ci)
                 continue
-            if self._should_refresh(r, comp, st.snapshots,
+            if self._should_refresh(r, self._lane_probe(run, ci),
+                                    st.snapshots,
                                     st.last_refresh, st.ae_baseline):
                 todo.append(ci)
         for lane, new_params in self._refit(run, r, todo):
@@ -200,7 +223,7 @@ class AELifecycle:
             else:
                 st = run.clients[lane]
                 st.last_refresh = r
-                st.ae_baseline = self._baseline(comp, st)
+                st.ae_baseline = self._lane_baseline(run, lane)
             bytes_dec += ae.decoder_sync_bytes(new_params)
             synced.append(lane)
         return bytes_dec, synced
@@ -223,19 +246,21 @@ class AELifecycle:
         spec = comp.spec(flat.size)
         return float(_rel_recon_err(spec, comp.codec_params(), flat))
 
-    def _baseline(self, comp, st) -> Optional[float]:
-        if not st.snapshots:
-            return None
-        return self._rel_err(comp, st.snapshots[-1])
-
     # ------------------------------------------------------------------
-    def _refit_dataset(self, comp, snaps: List[jax.Array]
-                       ) -> Tuple[Any, jax.Array]:
+    def _refit_dataset(self, run, lane) -> Tuple[Any, jax.Array]:
         """(fc-config, training rows) for one lane's refit. FCAE trains
         on padded snapshot rows; the chunked AE trains its shared funnel on
-        every chunk of every snapshot."""
-        spec = codec.ae_spec(comp.spec(snaps[0].shape[0]))
-        stackd = jnp.stack(snaps)
+        every chunk of every snapshot. Chain lanes first fold each snapshot
+        through the chain's prefix stages (``codec.ae_stage_input``) so a
+        sparsify→AE chain refits its AE on the top-k values it actually
+        encodes, not the raw update."""
+        adapter = self._lane_adapter(run, lane)
+        snaps = self._lane_snaps(run, lane)
+        wire_spec = adapter.spec(snaps[0].shape[0])
+        params = adapter.codec_params()
+        spec = codec.ae_spec(wire_spec)
+        vecs = [codec.ae_stage_input(wire_spec, params, s) for s in snaps]
+        stackd = jnp.stack(vecs)
         if isinstance(spec, codec.FCAESpec):
             pad = spec.cfg.input_dim - stackd.shape[1]
             if pad:
@@ -243,7 +268,7 @@ class AELifecycle:
             return spec.cfg, stackd
         assert isinstance(spec, codec.ChunkedAESpec)
         rows = jnp.concatenate([
-            ae.chunk_vector(s, spec.cfg.chunk_size)[0] for s in snaps])
+            ae.chunk_vector(v, spec.cfg.chunk_size)[0] for v in vecs])
         return spec.cfg.as_fc(), rows
 
     def _rng(self, r: int, ci: int) -> jax.Array:
@@ -272,9 +297,7 @@ class AELifecycle:
         groups: Dict[Tuple[Any, Tuple[int, ...]], List[Tuple[Any, jax.Array]]]
         groups = {}
         for lane in todo:
-            comp = self._lane_comp(run, lane)
-            fc_cfg, rows = self._refit_dataset(
-                comp, self._lane_snaps(run, lane))
+            fc_cfg, rows = self._refit_dataset(run, lane)
             groups.setdefault((fc_cfg, rows.shape), []).append((lane, rows))
 
         out: List[Tuple[Any, Pytree]] = []

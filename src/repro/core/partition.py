@@ -443,9 +443,14 @@ def _grouped_server_round(groups_host, norm_weights: List[float],
                 w_b = jnp.asarray([norm_weights[i] / s_g for i in idx],
                                   jnp.float32)
             slot = None
-            if (isinstance(cspec, codec.ChunkedAESpec) and cspec.use_kernel
-                    and not pb):
-                slot = dec_slots.setdefault(id(prm), len(dec_slots))
+            # terminal-stage routing (DESIGN.md §13.4): any spec whose final
+            # decode transform is a kernel-path chunked-AE expansion — bare
+            # or behind pointwise chain stages — joins the grouped ragged
+            # launch; slots key on the AE *stage's* params so chains and
+            # bare specs sharing one decoder share one slot
+            if codec.kernel_terminal_ae(cspec) is not None and not pb:
+                slot = dec_slots.setdefault(
+                    id(codec.ae_stage_params(cspec, prm)), len(dec_slots))
             bplan.append((cspec, pb, slot, single))
             pays.append(stacked)
             prms.append(prm)
@@ -487,11 +492,13 @@ def _grouped_round(plan, size, payloads, params, wlists, sgs,
         for (cspec, pb, slot, single), pay, prm, w_b, s_g in zip(
                 bplan, pays, prms, ws, sgl):
             if slot is not None:
-                h = codec.chunked_hidden(cspec, prm, pay["z"])
-                jobs.setdefault((h.shape[-1], cspec.cfg.chunk_size),
+                kspec = codec.kernel_terminal_ae(cspec)
+                z, ae_prm = codec.kernel_chain_latents(cspec, prm, pay)
+                h = codec.chunked_hidden(kspec, ae_prm, z)
+                jobs.setdefault((h.shape[-1], kspec.cfg.chunk_size),
                                 []).append(dict(
-                    h=h, w=w_b, slot=slot, dec=prm["dec"][-1],
-                    norm=prm["norm"], spec=cspec, sg=s_g, single=single,
+                    h=h, w=w_b, slot=slot, dec=ae_prm["dec"][-1],
+                    norm=ae_prm["norm"], spec=cspec, sg=s_g, single=single,
                     base_g=base_g, name=name))
                 continue
             mean_b = codec.decode_and_aggregate(cspec, prm, pay, w_b,

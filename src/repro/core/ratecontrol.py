@@ -382,7 +382,7 @@ class RateController:
                 comp.params = refit[ci]
             st = run.clients[ci]
             st.last_refresh = r
-            st.ae_baseline = lc._baseline(comp, st)
+            st.ae_baseline = lc._lane_baseline(run, ci)
             # the server cannot decode the new rung without its decoder:
             # every switch onto an AE rung ships one, refit or not
             bytes_dec += ae.decoder_sync_bytes(comp.params)
@@ -523,8 +523,8 @@ class RateController:
                 for name, rungs in row.items():
                     for k, entry in enumerate(rungs):
                         if entry.get("params") is not None:
-                            self._pcomps[ci][name][k].ae_compressor() \
-                                .params = entry["params"]
+                            self._pcomps[ci][name][k].set_codec_params(
+                                entry["params"])
                 pc = partitioned(self.run.compressors[ci])
                 for name in self.partition.names:
                     pc.compressors[name] = \
@@ -541,8 +541,7 @@ class RateController:
         for ci, row in enumerate(tree["codecs"]):
             for k, entry in enumerate(row):
                 if entry.get("params") is not None:
-                    self._comps[ci][k].ae_compressor().params = \
-                        entry["params"]
+                    self._comps[ci][k].set_codec_params(entry["params"])
             self.run.compressors[ci] = self._comps[ci][self._rung[ci]]
 
 

@@ -163,7 +163,7 @@ def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
     spec = comp.spec(flat.size)
     params = comp.codec_params()
     payload = codec.encode(spec, params, flat)
-    stats = codec_stats(flat, payload)
+    stats = codec_stats(flat, payload, spec=spec)
     if cfg.error_feedback:
         decoded = unravel(codec.decode(spec, params, payload))
         state.residual = ef_residual(payload_tree, decoded)
@@ -277,6 +277,14 @@ def _controller_name(run) -> Optional[str]:
     return rc.name if rc is not None else None
 
 
+def _measured_up(encoded: Sequence[EncodedUpdate]) -> float:
+    """Round uplink under the *measured-bytes* channel (DESIGN.md §13.3):
+    entropy-coded stacks price below the dense eval-shape wire size, every
+    other spec measures identical to ``compressed_bytes``."""
+    return sum(e.stats.get("measured_bytes", e.stats["compressed_bytes"])
+               for e in encoded)
+
+
 def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
                    **extra):
     """Evaluate the (already-updated) global model and build a RoundRecord."""
@@ -350,6 +358,7 @@ class SyncFedAvg(RoundScheduler):
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
+            bytes_up_measured=_measured_up(encoded),
             bytes_down=model_bytes * n + dec_bytes,
             bytes_down_raw=model_bytes * n + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,
@@ -439,6 +448,7 @@ class SampledSync(RoundScheduler):
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
+            bytes_up_measured=_measured_up(encoded),
             bytes_down=model_bytes * c + dec_bytes,
             bytes_down_raw=model_bytes * c + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,
@@ -685,6 +695,7 @@ class AsyncBuffered(RoundScheduler):
             sum(e.stats["compressed_bytes"] for e in encoded),
             sum(e.stats["original_bytes"] for e in encoded),
             [e.stats["compression_ratio"] for e in encoded],
+            bytes_up_measured=_measured_up(encoded),
             bytes_down=bytes_down + dec_bytes,
             bytes_down_raw=bytes_down + dec_bytes,
             bytes_decoder=dec_bytes, ae_syncs=syncs,

@@ -229,6 +229,27 @@ def test_committed_baseline_is_valid(table):
     assert "roofline" in doc            # ROOFLINES-registered tables
 
 
+def test_committed_baseline_codec_stacks_is_valid():
+    """fl_codec_stacks (DESIGN.md §13.5) has a committed baseline with
+    enough rows for median rescaling; no roofline (not a ROOFLINES
+    table). Every row's derived field carries the stack's wire fraction —
+    chained stacks must price strictly below the bare q8 row."""
+    path = os.path.join(BASELINE_DIR, "BENCH_fl_codec_stacks.json")
+    assert os.path.exists(path), (
+        "missing committed baseline — regenerate with "
+        "`python -m benchmarks.run --tables fl_codec_stacks "
+        "--json benchmarks/baselines`")
+    doc = check_regression.load_artifact(path)
+    assert doc["name"] == "fl_codec_stacks" and "error" not in doc
+    timed = {r["name"]: r["us_per_call"] for r in doc["rows"]
+             if r["us_per_call"] > 0}
+    assert len(timed) >= 4
+    fracs = {r["name"]: float(re.search(r"wire ([\d.]+)x", r["derived"])
+                              .group(1)) for r in doc["rows"]}
+    assert fracs["topk_q8_c8"] < fracs["q8_c8"]
+    assert fracs["ae_q8_kernel_c8"] < fracs["q8_c8"]
+
+
 def test_committed_baseline_proves_grouped_overhead_bound():
     """The PR's acceptance number: at cohort 64 the grouped one-dispatch
     round holds the mixed-rung partition overhead to ≤1.3× the flat

@@ -1,0 +1,663 @@
+"""Composable codec stacks (DESIGN.md §13): ChainSpec validation, the
+stage-ops protocol, single-stage-chain ≡ bare-codec bitwise equality,
+ComposedSpec-as-alias differential compatibility, FedZip-direction stages
+(top-k prefix, k-means codebook, entropy-priced wire size), the measured-
+bytes channel, scatter/kernel fused aggregation oracles, grouped-partition
+equivalence, and chain stacks end-to-end through every scheduler, the
+rate-control ladders, and bit-exact checkpoint resume."""
+import os
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:       # dev extra absent: property tests skip
+    from _hypothesis_stub import hypothesis, st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.paper import MNIST_CLASSIFIER, AEConfig
+from repro.core import (ByteBudget, ChainCompressor, ChainSpec,
+                        ChunkedAECompressor, ChunkedAEConfig,
+                        ComposedCompressor, EntropySpec, FCAECompressor,
+                        FLConfig, FederatedRun, IdentityCompressor,
+                        KMeansCompressor, KMeansSpec, PartitionedCompressor,
+                        QuantizeCompressor, SampledSync, AsyncBuffered,
+                        TopKCompressor, by_layer_partition, codec,
+                        init_chunked_ae, init_fc_ae, normalize_weights,
+                        partition_ladder, tree_bytes, wire_bytes)
+from repro.core import autoencoder as ae
+from repro.core.codec import (IdentitySpec, QuantizeSpec, TopKSpec,
+                              composed_chain, is_shape_static,
+                              measured_bytes, stage_out_size)
+from repro.data.pipeline import (mnist_like, train_eval_split,
+                                 uniform_partition)
+from repro.models.classifiers import init_classifier
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=15,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+N = 1250                                     # deliberately chunk-ragged
+
+_CHUNK_CFG = ChunkedAEConfig(chunk_size=128, hidden=(32,), latent_chunk=4)
+_CHUNK_PARAMS = init_chunked_ae(jax.random.PRNGKey(0), _CHUNK_CFG)
+_FC_CFG = AEConfig(input_dim=2048, encoder_hidden=(64,), latent_dim=16)
+_FC_PARAMS = init_fc_ae(jax.random.PRNGKey(0), _FC_CFG)
+
+
+def _flat(seed, n=N, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+def _roundtrip(comp, flat):
+    spec = comp.spec(flat.shape[0])
+    params = comp.codec_params()
+    payload = codec.encode(spec, params, flat)
+    return spec, params, payload
+
+
+# ----------------------------------------------------- ChainSpec contract
+def test_chain_validation_errors():
+    q = QuantizeSpec(size=100, bits=8)
+    tk = TopKSpec(size=1000, k=100)
+    with pytest.raises(ValueError):
+        ChainSpec(())                                    # empty
+    with pytest.raises(TypeError):
+        ChainSpec((ChainSpec((tk,)), q))                 # nested chain
+    with pytest.raises(ValueError):
+        ChainSpec((EntropySpec(),))                      # entropy leads
+    with pytest.raises(ValueError):
+        ChainSpec((tk, EntropySpec(), q))                # entropy mid-chain
+    with pytest.raises(ValueError):
+        ChainSpec((q, QuantizeSpec(size=100)))           # terminal-only first
+    with pytest.raises(ValueError):
+        ChainSpec((KMeansSpec(size=100), q))             # terminal-only first
+    with pytest.raises(ValueError):
+        ChainSpec((tk, QuantizeSpec(size=7)))            # size mismatch
+    with pytest.raises(ValueError):
+        fc = codec.FCAESpec(size=100, cfg=_FC_CFG)
+        ChainSpec((tk, codec.ChunkedAESpec(size=100, cfg=_CHUNK_CFG),
+                   fc))                                  # two AE stages
+    # valid chains are frozen, hashable, jit-static
+    c = ChainSpec((tk, q))
+    assert hash(c) == hash(ChainSpec((tk, q)))
+    assert c.size == 1000 and c.vector_stages == (tk, q)
+
+
+def test_stage_out_size_protocol():
+    assert stage_out_size(TopKSpec(size=1000, k=64)) == 64
+    assert stage_out_size(IdentitySpec(size=77)) == 77
+    assert stage_out_size(codec.ChunkedAESpec(size=1000, cfg=_CHUNK_CFG)) \
+        == 8 * _CHUNK_CFG.latent_chunk
+    assert stage_out_size(QuantizeSpec(size=100)) is None
+    assert stage_out_size(KMeansSpec(size=100)) is None
+
+
+# ----------------------------------- single-stage chain ≡ bare codec (bit)
+def _bare_compressors():
+    return [
+        IdentityCompressor(),
+        QuantizeCompressor(bits=8, block=64),
+        QuantizeCompressor(bits=4, block=64),
+        TopKCompressor(fraction=0.1),
+        KMeansCompressor(k=16, iters=4),
+        FCAECompressor(_FC_PARAMS, _FC_CFG),
+        ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG, use_kernel=False),
+    ]
+
+
+@pytest.mark.parametrize("comp", _bare_compressors(),
+                         ids=lambda c: c.name)
+def test_single_stage_chain_bitwise(comp):
+    """A 1-stage chain must be bit-identical to the bare codec at every
+    entry point — wrapping a codec in the combinator is a no-op."""
+    flat = _flat(1)
+    bare_spec, params, bare_pl = _roundtrip(comp, flat)
+    chain = ChainSpec((bare_spec,))
+    cparams = None if params is None else (params,)
+    chain_pl = codec.encode(chain, cparams, flat)
+    assert set(chain_pl) == {"s0"}
+    for k in bare_pl:
+        np.testing.assert_array_equal(np.asarray(bare_pl[k]),
+                                      np.asarray(chain_pl["s0"][k]))
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(bare_spec, params, bare_pl)),
+        np.asarray(codec.decode(chain, cparams, chain_pl)))
+    # batched decode + fused aggregate, 3-client cohort
+    pls = [codec.encode(bare_spec, params, _flat(s)) for s in (1, 2, 3)]
+    stacked_b = codec.stack_payloads(pls)
+    stacked_c = codec.stack_payloads(
+        [{"s0": pl} for pl in pls])
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_batched(bare_spec, params, stacked_b)),
+        np.asarray(codec.decode_batched(chain, cparams, stacked_c)))
+    w = jnp.asarray(normalize_weights([1.0, 2.0, 3.0]), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_and_aggregate(bare_spec, params,
+                                              stacked_b, w)),
+        np.asarray(codec.decode_and_aggregate(chain, cparams,
+                                              stacked_c, w)))
+    assert wire_bytes(chain, cparams) == wire_bytes(bare_spec, params)
+
+
+# -------------------------------------- ComposedSpec alias (differential)
+def _composed_reference(inner_spec, ae_params, bits, block, flat):
+    """The pre-refactor ComposedSpec encode/decode, copied as the oracle:
+    AE-encode, flatten the latents, blockwise-quantize → {z_q, z_scales};
+    decode dequantizes and AE-decodes."""
+    from repro.kernels import ops
+    z = ae.chunked_encode(ae_params, inner_spec.cfg, flat)
+    q, scales, _ = ops.quantize_blocks(z.reshape(-1), bits=bits, block=block)
+    payload = {"z_q": q, "z_scales": scales}
+    n_latent = z.size
+    z_hat = ops.dequantize_blocks(q, scales, bits=bits, block=block,
+                                  orig_len=n_latent)
+    dec = ae.chunked_decode(ae_params, inner_spec.cfg,
+                            z_hat.reshape(z.shape), inner_spec.size)
+    return payload, dec
+
+
+def test_composed_alias_bitwise_vs_old_path():
+    """ComposedSpec canonicalizes through the 2-stage chain but must keep
+    its historical payload keys and bit-exact numerics — pre-refactor
+    payloads and golden trajectories stay valid."""
+    comp = ComposedCompressor(
+        inner=ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG,
+                                  use_kernel=False), bits=8, block=64)
+    flat = _flat(5)
+    spec, params, payload = _roundtrip(comp, flat)
+    assert isinstance(spec, codec.ComposedSpec)
+    assert set(payload) == {"z_q", "z_scales"}        # historical wire keys
+    ref_pl, ref_dec = _composed_reference(spec.inner, params, spec.bits,
+                                          spec.block, flat)
+    np.testing.assert_array_equal(np.asarray(payload["z_q"]),
+                                  np.asarray(ref_pl["z_q"]))
+    np.testing.assert_array_equal(np.asarray(payload["z_scales"]),
+                                  np.asarray(ref_pl["z_scales"]))
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(spec, params, payload)),
+        np.asarray(ref_dec))
+    # the canonical chain is the same computation under namespaced keys
+    chain = composed_chain(spec)
+    chain_pl = codec.encode(chain, (params, None), flat)
+    np.testing.assert_array_equal(np.asarray(payload["z_q"]),
+                                  np.asarray(chain_pl["s1"]["q"]))
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(spec, params, payload)),
+        np.asarray(codec.decode(chain, (params, None), chain_pl)))
+    assert wire_bytes(spec, params) == wire_bytes(chain, (params, None))
+
+
+def test_composed_batched_decode_matches_sequential():
+    comp = ComposedCompressor(
+        inner=ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG,
+                                  use_kernel=False), bits=8, block=64)
+    spec = comp.spec(N)
+    params = comp.codec_params()
+    pls = [codec.encode(spec, params, _flat(s)) for s in range(3)]
+    rows = codec.decode_batched(spec, params, codec.stack_payloads(pls))
+    for i, pl in enumerate(pls):
+        np.testing.assert_array_equal(
+            np.asarray(rows[i]), np.asarray(codec.decode(spec, params, pl)))
+
+
+# --------------------------------------------- wire pricing + measured
+def test_wire_bytes_requires_ae_params():
+    """Regression: pricing an AE-bearing spec with ``params=None`` used to
+    crash inside eval_shape with an opaque tracer error — it must raise a
+    clear ValueError naming the fix."""
+    for spec in (codec.FCAESpec(size=N, cfg=_FC_CFG),
+                 codec.ChunkedAESpec(size=N, cfg=_CHUNK_CFG),
+                 codec.ComposedSpec(
+                     inner=codec.ChunkedAESpec(size=N, cfg=_CHUNK_CFG)),
+                 ChainSpec((TopKSpec(size=N, k=128),
+                            codec.ChunkedAESpec(size=128,
+                                                cfg=_CHUNK_CFG)))):
+        with pytest.raises(ValueError, match="codec_params"):
+            wire_bytes(spec, None)
+    # pointwise chains price fine without params
+    assert wire_bytes(ChainSpec((TopKSpec(size=N, k=128),
+                                 QuantizeSpec(size=128, block=64)))) > 0
+
+
+def test_chain_wire_bytes_matches_real_encode():
+    comps = [
+        ChainCompressor([TopKCompressor(fraction=0.1),
+                         QuantizeCompressor(bits=8, block=64)]),
+        ChainCompressor([TopKCompressor(fraction=0.2),
+                         KMeansCompressor(k=16, iters=4)]),
+        ChainCompressor([TopKCompressor(fraction=0.3),
+                         ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG),
+                         QuantizeCompressor(bits=8, block=64)]),
+    ]
+    flat = _flat(7)
+    for comp in comps:
+        spec, params, payload = _roundtrip(comp, flat)
+        assert is_shape_static(spec)
+        assert wire_bytes(spec, params) == tree_bytes(payload), comp.name
+        assert measured_bytes(spec, payload) == tree_bytes(payload)
+
+
+def test_entropy_measured_channel():
+    """EntropySpec never changes the payload, only the measured price:
+    measured ≤ dense always, < dense for genuinely low-entropy codes, and
+    the spec is flagged shape-non-static so planners ignore it."""
+    dense = ChainCompressor([TopKCompressor(fraction=0.1),
+                             KMeansCompressor(k=8, iters=4)])
+    coded = ChainCompressor([TopKCompressor(fraction=0.1),
+                             KMeansCompressor(k=8, iters=4)],
+                            entropy_coded=True)
+    flat = _flat(9)
+    spec_d, _, pl_d = _roundtrip(dense, flat)
+    spec_c, _, pl_c = _roundtrip(coded, flat)
+    assert is_shape_static(spec_d) and not is_shape_static(spec_c)
+    assert isinstance(spec_c.stages[-1], EntropySpec)
+    # identical device payload: entropy is a pricing stage, not a transform
+    for k in pl_d:
+        for kk in pl_d[k]:
+            np.testing.assert_array_equal(np.asarray(pl_d[k][kk]),
+                                          np.asarray(pl_c[k][kk]))
+    m = measured_bytes(spec_c, pl_c)
+    assert m <= tree_bytes(pl_c)
+    # 8-symbol codes at uint8: entropy coding must beat a byte per code
+    assert m < tree_bytes(pl_c)
+    # decode is byte-for-byte the dense chain's
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(spec_d, None, pl_d)),
+        np.asarray(codec.decode(spec_c, None, pl_c)))
+
+
+# ---------------------------------------------- fused aggregation oracles
+def _seq_oracle(spec, params, pls, w, base=None):
+    rows = [codec.decode(spec, params, pl) for pl in pls]
+    out = None
+    for wi, row in zip(w, rows):
+        r = row if base is None else row - base
+        c = jnp.float32(wi) * r.astype(jnp.float32)
+        out = c if out is None else out + c
+    return out
+
+
+@pytest.mark.parametrize("with_base", [False, True])
+def test_topk_scatter_aggregate_matches_oracle(with_base):
+    """Scatter-terminal chains (DESIGN.md §13.4) reduce by one weighted
+    scatter-add — must match the sequential per-client decode oracle."""
+    comp = ChainCompressor([TopKCompressor(fraction=0.1),
+                            QuantizeCompressor(bits=8, block=64)])
+    spec = comp.spec(N)
+    pls = [codec.encode(spec, None, _flat(s)) for s in range(4)]
+    w = normalize_weights([1.0, 2.0, 3.0, 4.0])
+    base = _flat(99) if with_base else None
+    got = codec.decode_and_aggregate(
+        spec, None, codec.stack_payloads(pls),
+        jnp.asarray(w, jnp.float32), base)
+    want = _seq_oracle(spec, None, pls, w, base)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-5)
+
+
+def test_kernel_terminal_chain_aggregate_matches_oracle():
+    """A quantized kernel-path AE chain still takes the fused Pallas
+    decode→aggregate branch; numerics match the sequential oracle."""
+    kcomp = ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG, use_kernel=True)
+    comp = ChainCompressor([kcomp, QuantizeCompressor(bits=8, block=64)])
+    spec = comp.spec(N)
+    params = comp.codec_params()
+    assert codec.kernel_terminal_ae(spec) is not None
+    pls = [codec.encode(spec, params, _flat(s)) for s in range(3)]
+    w = normalize_weights([2.0, 1.0, 1.0])
+    got = codec.decode_and_aggregate(
+        spec, params, codec.stack_payloads(pls),
+        jnp.asarray(w, jnp.float32))
+    want = _seq_oracle(spec, params, pls, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+    # sparsified chains must NOT claim the kernel branch: their terminal
+    # decode transform is a scatter, not an AE expansion
+    sc = ChainCompressor([TopKCompressor(fraction=0.3), kcomp]).spec(N)
+    assert codec.kernel_terminal_ae(sc) is None
+
+
+def test_kmeans_roundtrip_and_warm_start():
+    flat = _flat(11, n=512)
+    spec = KMeansSpec(size=512, k=8, iters=6)
+    pl = codec.encode(spec, None, flat)
+    assert pl["codes"].dtype == jnp.uint8
+    assert pl["codebook"].shape == (8,)
+    dec = codec.decode(spec, None, pl)
+    assert dec.shape == (512,)
+    # reconstruction maps every element to its nearest centroid
+    cb = np.asarray(pl["codebook"])
+    err = np.abs(np.asarray(flat) - np.asarray(dec))
+    best = np.min(np.abs(np.asarray(flat)[:, None] - cb[None, :]), axis=1)
+    np.testing.assert_allclose(err, best, atol=1e-6)
+    # warm start: a checkpointed codebook seeds Lloyd — more steps from the
+    # cold fit can only lower distortion (Lloyd is monotone)
+    warm = codec.encode(spec, {"codebook": pl["codebook"]}, flat)
+    warm_dec = codec.decode(spec, None, warm)
+    cold_mse = float(np.mean(err ** 2))
+    warm_mse = float(np.mean((np.asarray(flat) - np.asarray(warm_dec)) ** 2))
+    assert warm_mse <= cold_mse + 1e-9
+
+
+# ------------------------------------------- property: random stage stacks
+def _stack_menu():
+    return [
+        lambda: ChainCompressor([TopKCompressor(fraction=0.1)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.2),
+                                 QuantizeCompressor(bits=8, block=64)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.2),
+                                 QuantizeCompressor(bits=4, block=64)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.2),
+                                 KMeansCompressor(k=8, iters=3)]),
+        lambda: ChainCompressor([IdentityCompressor(),
+                                 QuantizeCompressor(bits=8, block=64)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.3),
+                                 ChunkedAECompressor(_CHUNK_PARAMS,
+                                                     _CHUNK_CFG)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.3),
+                                 ChunkedAECompressor(_CHUNK_PARAMS,
+                                                     _CHUNK_CFG),
+                                 QuantizeCompressor(bits=8, block=64)]),
+        lambda: ChainCompressor([TopKCompressor(fraction=0.2),
+                                 QuantizeCompressor(bits=8, block=64)],
+                                entropy_coded=True),
+    ]
+
+
+@hypothesis.given(st.integers(0, 7), st.sampled_from([257, 1250]),
+                  st.integers(0, 10 ** 6))
+def test_property_random_stack_roundtrip(which, n, seed):
+    """Any menu stack at any size: fixed payload shapes/dtypes, jit-clean
+    decode, batched ≡ sequential decode, fused aggregate ≡ oracle, and
+    exact wire pricing for shape-static stacks."""
+    comp = _stack_menu()[which]()
+    flat = _flat(seed % 97, n=n)
+    spec, params, payload = _roundtrip(comp, flat)
+    dec = codec.decode(spec, params, payload)
+    assert dec.shape == (n,) and dec.dtype == jnp.float32
+    jit_dec = jax.jit(codec.decode, static_argnums=0)(spec, params, payload)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(jit_dec))
+    pls = [payload, codec.encode(spec, params, _flat((seed + 1) % 97, n=n))]
+    rows = codec.decode_batched(spec, params, codec.stack_payloads(pls))
+    for i, pl in enumerate(pls):
+        np.testing.assert_allclose(
+            np.asarray(rows[i]),
+            np.asarray(codec.decode(spec, params, pl)),
+            atol=1e-6, rtol=1e-6)
+    w = normalize_weights([3.0, 1.0])
+    got = codec.decode_and_aggregate(spec, params, codec.stack_payloads(pls),
+                                     jnp.asarray(w, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_seq_oracle(spec, params, pls, w)),
+                               atol=1e-5, rtol=1e-4)
+    if is_shape_static(spec):
+        assert wire_bytes(spec, params) == tree_bytes(payload)
+        assert measured_bytes(spec, payload) == tree_bytes(payload)
+    else:
+        assert measured_bytes(spec, payload) <= tree_bytes(payload)
+
+
+# --------------------------------------- grouped partition path (chains)
+TMPL = init_classifier(jax.random.PRNGKey(0), MNIST_CLASSIFIER)
+PM = by_layer_partition(TMPL)
+N_CLIENTS = 3
+
+
+def _fed_data():
+    train, ev = train_eval_split(mnist_like(0, 128), 32)
+    return uniform_partition(0, train, N_CLIENTS), ev
+
+
+def _mixed_stack_compressors():
+    """A per-layer partition whose groups carry DIFFERENT stacks: the first
+    group a sparsified AE chain, the others plain q8."""
+    names = list(PM.names)
+    comps = {}
+    for i, name in enumerate(names):
+        if i == 0:
+            comps[name] = ChainCompressor(
+                [TopKCompressor(fraction=0.3),
+                 ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG,
+                                     use_kernel=True),
+                 QuantizeCompressor(bits=8, block=64)])
+        else:
+            comps[name] = QuantizeCompressor(bits=8)
+    return [PartitionedCompressor(
+        PM, {n: c for n, c in comps.items()}) for _ in range(N_CLIENTS)]
+
+
+def _mk_mixed_run(data, ev, grouped):
+    cfg = FLConfig(n_rounds=2, local_epochs=1, payload="update",
+                   error_feedback=True, use_grouped_kernel=grouped)
+    return FederatedRun(MNIST_CLASSIFIER, data, cfg,
+                        compressors=_mixed_stack_compressors(),
+                        eval_data=ev)
+
+
+def test_mixed_stack_partition_grouped_equals_sequential():
+    """Acceptance: a PartitionSpec whose groups carry different stacks runs
+    through the grouped one-dispatch server path, bit-identical to the
+    sequential per-bucket path (chains included)."""
+    data, ev = _fed_data()
+    seq = _mk_mixed_run(data, ev, grouped=False)
+    hist_s = seq.run()
+    grp = _mk_mixed_run(data, ev, grouped=True)
+    hist_g = grp.run()
+    for x, y in zip(jax.tree_util.tree_leaves(seq.global_params),
+                    jax.tree_util.tree_leaves(grp.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for a, b in zip(hist_s, hist_g):
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_up_measured == b.bytes_up_measured
+
+
+# ------------------------------------------- end-to-end through the stack
+def _chain_comps(n_clients):
+    return [ChainCompressor([TopKCompressor(fraction=0.3),
+                             ChunkedAECompressor(_CHUNK_PARAMS, _CHUNK_CFG),
+                             QuantizeCompressor(bits=8, block=64)])
+            for _ in range(n_clients)]
+
+
+@pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
+def test_chain_e2e_schedulers_bytes_reconcile(sched):
+    """Acceptance: a sparsify→AE→q8 chain runs under every scheduler, and
+    every round's recorded uplink equals the static wire price times the
+    participants — planned and observed bytes can never diverge for
+    shape-static stacks (measured channel included)."""
+    data, ev = _fed_data()
+    scheduler = {"sync": None,
+                 "sampled": SampledSync(cohort=2),
+                 "async": AsyncBuffered(buffer_k=2)}[sched]
+    cfg = FLConfig(n_rounds=2, local_epochs=1, payload="update",
+                   error_feedback=True)
+    run = FederatedRun(MNIST_CLASSIFIER, data, cfg,
+                       compressors=_chain_comps(N_CLIENTS),
+                       eval_data=ev, scheduler=scheduler)
+    hist = run.run()
+    comp = run.compressors[0]
+    price = wire_bytes(comp.spec(ravel_pytree(run.global_params)[0].size),
+                       comp.codec_params())
+    for rec in hist:
+        n_part = len(rec.participants)
+        assert rec.bytes_up == price * n_part
+        assert rec.bytes_up_measured == rec.bytes_up
+        assert rec.bytes_up < rec.bytes_up_raw
+        assert np.isfinite(rec.compression_ratio)
+
+
+def test_chain_e2e_resume_bit_exact(tmp_path):
+    """Acceptance: save/load mid-run with chain compressors reproduces the
+    uninterrupted trajectory bit-exactly (EF residuals, chain params and
+    byte accounting all survive the checkpoint)."""
+    data, ev = _fed_data()
+
+    def mk(n_rounds):
+        cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update",
+                       error_feedback=True)
+        return FederatedRun(MNIST_CLASSIFIER, data, cfg,
+                            compressors=_chain_comps(N_CLIENTS),
+                            eval_data=ev)
+
+    full = mk(2)
+    hist_full = full.run()
+    first = mk(1)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+    resumed = mk(1)
+    assert resumed.load_state(path) == 1
+    hist_resumed = resumed.run()
+    for x, y in zip(jax.tree_util.tree_leaves(full.global_params),
+                    jax.tree_util.tree_leaves(resumed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for a, b in zip(hist_full[1:], hist_resumed):
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_up_measured == b.bytes_up_measured
+
+
+# ------------------------------------------- AE lifecycle through chains
+def test_lifecycle_refits_chained_ae():
+    """A chained AE refits on its true encode distribution: snapshots fold
+    through the chain prefix (``codec.ae_stage_input``) and the refreshed
+    decoder ships + is charged, exactly like a bare-AE lane."""
+    from repro.core import AELifecycle
+    data, ev = _fed_data()
+    comps = _chain_comps(N_CLIENTS)
+    before = jax.tree_util.tree_leaves(comps[0].ae_compressor().params)
+    before = [np.asarray(x).copy() for x in before]
+    # batch_size must fit the per-client shard (~32 samples) or local
+    # training takes zero steps and every snapshot is the zero update
+    cfg = FLConfig(n_rounds=3, local_epochs=1, payload="update",
+                   error_feedback=True, batch_size=16)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data, cfg, compressors=comps, eval_data=ev,
+        lifecycle=AELifecycle(refresh_every=2, min_snapshots=1,
+                              refresh_epochs=2, batch_size=4))
+    hist = run.run()
+    refit_rounds = [r for r in hist if r.round > 0 and r.ae_syncs]
+    assert refit_rounds, "chained AE never refit"
+    assert all(r.bytes_decoder > 0 for r in refit_rounds)
+    after = jax.tree_util.tree_leaves(run.compressors[0]
+                                      .ae_compressor().params)
+    assert any(not np.array_equal(a, np.asarray(b))
+               for a, b in zip(before, after)), "refit left params unchanged"
+
+
+# ---------------------------------------------- rate-control chain rungs
+def _chain_ladder(n_clients):
+    """Ascending-cost ladder whose rungs are chains: topk(5%)→q8 below
+    topk(20%)→q8 below plain q8."""
+    return [[ChainCompressor([TopKCompressor(fraction=0.05),
+                              QuantizeCompressor(bits=8, block=64)]),
+             ChainCompressor([TopKCompressor(fraction=0.2),
+                              QuantizeCompressor(bits=8, block=64)]),
+             QuantizeCompressor(bits=8)] for _ in range(n_clients)]
+
+
+def test_chain_rungs_ladder_resume_bit_exact(tmp_path):
+    """Acceptance: chain rungs ride the generic ladder machinery under a
+    ByteBudget controller, and controller state (including per-rung chain
+    codec params) restores bit-exactly."""
+    data, ev = _fed_data()
+
+    def mk(n_rounds):
+        cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update")
+        return FederatedRun(
+            MNIST_CLASSIFIER, data, cfg, compressors=None, eval_data=ev,
+            ratecontrol=ByteBudget(ladder=_chain_ladder(N_CLIENTS),
+                                   budget=float("inf"), min_snapshots=1))
+
+    full = mk(2)
+    hist_full = full.run()
+    assert all(rec.controller == "byte_budget" for rec in hist_full)
+    first = mk(1)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+    resumed = mk(1)
+    assert resumed.load_state(path) == 1
+    hist_resumed = resumed.run()
+    for x, y in zip(jax.tree_util.tree_leaves(full.global_params),
+                    jax.tree_util.tree_leaves(resumed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for a, b in zip(hist_full[1:], hist_resumed):
+        assert a.bytes_up == b.bytes_up
+        assert a.spec_switches == b.spec_switches
+
+
+def test_chain_rungs_partition_ladder_binds_and_runs():
+    """Chain rungs inside a per-(client,partition) ladder under one shared
+    ByteBudget: binds (ascending per-group costs) and runs."""
+    data, ev = _fed_data()
+    rungs = {}
+    for i, name in enumerate(PM.names):
+        if i == 0:
+            rungs[name] = [
+                lambda ci, n: ChainCompressor(
+                    [TopKCompressor(fraction=0.05),
+                     QuantizeCompressor(bits=8, block=64)]),
+                lambda ci, n: QuantizeCompressor(bits=8)]
+        else:
+            rungs[name] = [lambda ci, n: QuantizeCompressor(bits=4),
+                           lambda ci, n: QuantizeCompressor(bits=8)]
+    ladder = partition_ladder(N_CLIENTS, PM, rungs)
+    cfg = FLConfig(n_rounds=2, local_epochs=1, payload="update")
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data, cfg, compressors=None, eval_data=ev,
+        ratecontrol=ByteBudget(ladder=ladder, partition=PM,
+                               budget=float("inf"), min_snapshots=1))
+    hist = run.run()
+    assert len(hist) == 2
+    assert all(np.isfinite(rec.bytes_up) and rec.bytes_up > 0
+               for rec in hist)
+
+
+# ------------------------------- pre-refactor checkpoint compat (composed)
+def test_composed_controller_checkpoint_restores(tmp_path):
+    """ComposedCompressor rungs keep the historical bare-AE-params
+    checkpoint convention (not chain tuples): controller state written with
+    it restores through the new ``set_codec_params`` lane bit-exactly."""
+    data, ev = _fed_data()
+    P = ravel_pytree(TMPL)[0].size
+    ccfg = ChunkedAEConfig(chunk_size=256, hidden=(32,), latent_chunk=8)
+
+    def ladder():
+        out = []
+        for ci in range(N_CLIENTS):
+            prm = init_chunked_ae(jax.random.PRNGKey(7), ccfg)
+            out.append([
+                ComposedCompressor(
+                    inner=ChunkedAECompressor(prm, ccfg), bits=8, block=64),
+                QuantizeCompressor(bits=8)])
+        return out
+
+    def mk(n_rounds):
+        cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update")
+        return FederatedRun(
+            MNIST_CLASSIFIER, data, cfg, compressors=None, eval_data=ev,
+            ratecontrol=ByteBudget(ladder=ladder(), budget=float("inf"),
+                                   min_snapshots=1))
+
+    full = mk(2)
+    full.run()
+    first = mk(1)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+    resumed = mk(1)
+    assert resumed.load_state(path) == 1
+    # the restored rung's codec params are the bare AE pytree, applied to
+    # the inner compressor (the historical convention)
+    comp = resumed.ratecontrol._comps[0][0]
+    assert isinstance(comp, ComposedCompressor)
+    assert comp.codec_params() is not None
+    resumed.run()
+    for x, y in zip(jax.tree_util.tree_leaves(full.global_params),
+                    jax.tree_util.tree_leaves(resumed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
