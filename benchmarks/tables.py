@@ -753,6 +753,98 @@ def table_fl_partition() -> List[Row]:
 
 
 # =====================================================================
+# per-role codec partitions over a real transformer pytree (DESIGN.md §14)
+# — client-side encode + server decode→aggregate at reduced zoo shapes
+# =====================================================================
+def table_fl_llm() -> List[Row]:
+    """The ``examples/llm_federated.py`` hot paths priced at benchmark
+    cohorts: a reduced ``configs/`` transformer is partitioned with
+    ``by_role_partition`` (embedding/attention/MLP on kernel-path chunked
+    AEs, norms on q8) and the table measures (a) one client's partitioned
+    encode, (b) the server decode→aggregate over the cohort — flat q8
+    baseline, per-role sequential buckets, and the one-dispatch grouped
+    round that folds all three AE buckets into a single ragged Pallas
+    launch. Non-FULL shrinks the arch below ``reduced()`` so cohort×model
+    stays CPU-CI-sized; FULL runs the example's actual reduced shapes."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.core import codec, normalize_weights, partition
+    from repro.core.autoencoder import ChunkedAEConfig, init_chunked_ae
+    from repro.core.scheduler import EncodedUpdate
+    from repro.models import init_params
+
+    cfg = get_config("llama3-8b").reduced()
+    if not FULL:
+        cfg = _dc.replace(cfg, d_model=128, n_heads=4, n_kv_heads=4,
+                          d_ff=256, vocab_size=512)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pmap = partition.by_role_partition(params)
+    ae_cfg = ChunkedAEConfig(chunk_size=256, hidden=(64,), latent_chunk=8)
+    prm = {name: (init_chunked_ae(jax.random.PRNGKey(7), ae_cfg)
+                  if name != "norm" else None) for name in pmap.names}
+    role_spec = partition.make_partition_spec(pmap, {
+        name: (codec.ChunkedAESpec(size=pmap.group_size(name), cfg=ae_cfg,
+                                   use_kernel=True) if name != "norm" else
+               codec.QuantizeSpec(size=pmap.group_size(name)))
+        for name in pmap.names})
+    model = pmap.size
+    flat_spec = codec.QuantizeSpec(size=model)
+    rows: List[Row] = [(f"llm_role_partition", 0.0,
+                        f"{cfg.name}: {model} params, "
+                        f"{ {n: pmap.group_size(n) for n in pmap.names} }")]
+
+    flat = jax.random.normal(jax.random.PRNGKey(0), (model,)) * 1e-3
+
+    def client_encode():
+        return jax.block_until_ready(
+            codec.encode(role_spec, prm, flat)["embedding"]["z"])
+
+    rows.append(("llm_encode_role_ae", _timeit_min(client_encode),
+                 "one client's partitioned encode (3 AE roles + q8 norm)"))
+
+    for cohort in (8, 32):
+        flats = [jax.random.normal(jax.random.PRNGKey(i), (model,)) * 1e-3
+                 for i in range(cohort)]
+        weights = normalize_weights([float(i + 1) for i in range(cohort)])
+        nw = jnp.asarray(weights, jnp.float32)
+        flat_stacked = codec.stack_payloads(
+            [codec.encode(flat_spec, None, f) for f in flats])
+        encoded = [EncodedUpdate(payload=codec.encode(role_spec, prm, f),
+                                 spec=role_spec, params=prm,
+                                 weight=weights[i], stats={}, metrics={})
+                   for i, f in enumerate(flats)]
+
+        def flat_path():
+            return jax.block_until_ready(
+                codec.decode_and_aggregate(flat_spec, None, flat_stacked,
+                                           nw))
+
+        def role_seq():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(encoded, weights, None))
+
+        def role_grouped():
+            return jax.block_until_ready(
+                partition.server_decode_aggregate(
+                    encoded, weights, None, use_grouped_kernel=True))
+
+        t_flat = _timeit_min(flat_path)
+        t_seq = _timeit_min(role_seq)
+        t_grp = _timeit_min(role_grouped)
+        rows += [
+            (f"llm_decode_agg_flat_q8_c{cohort}", t_flat, "flat q8 baseline"),
+            (f"llm_decode_agg_role_c{cohort}", t_seq,
+             f"overhead={t_seq / max(t_flat, 1e-9):.2f}x vs flat "
+             "(sequential (role, spec) buckets)"),
+            (f"llm_decode_agg_role_grouped_c{cohort}", t_grp,
+             f"speedup={t_seq / max(t_grp, 1e-9):.2f}x vs sequential "
+             "(3 AE roles in 1 grouped ragged launch)"),
+        ]
+    return rows
+
+
+# =====================================================================
 # analytic rooflines attached to the BENCH_*.json artifacts
 # (benchmarks/run.py --json; repro.roofline.analysis, DESIGN.md §11.3)
 # =====================================================================
@@ -966,6 +1058,7 @@ ALL_TABLES = [
     ("ae_train", table_ae_train),
     ("fl_rate_control", table_fl_rate_control),
     ("fl_partition", table_fl_partition),
+    ("fl_llm", table_fl_llm),
     ("fl_codec_stacks", table_fl_codec_stacks),
     ("fl_serve", table_fl_serve),
     ("roofline_summary", table_roofline_summary),

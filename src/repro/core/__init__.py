@@ -37,8 +37,10 @@ from repro.core.partition import (  # noqa: F401
     PartitionSpec,
     by_layer_partition,
     by_leaf_partition,
+    by_role_partition,
     identity_partition,
     make_partition_spec,
+    role_of_path,
     wire_bytes_by_group,
 )
 from repro.core import partition  # noqa: F401
@@ -102,6 +104,11 @@ from repro.core.prepass import (  # noqa: F401
     local_train,
     local_train_batched,
     run_prepass,
+)
+from repro.core.task import (  # noqa: F401
+    ClassifierTask,
+    ClientTask,
+    LMDeltaTask,
 )
 from repro.core.scheduler import (  # noqa: F401
     AsyncBuffered,

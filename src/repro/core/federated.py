@@ -28,6 +28,7 @@ from repro.configs.paper import ClassifierConfig
 from repro.core.compressor import Compressor, IdentityCompressor
 from repro.core.prepass import evaluate
 from repro.core.scheduler import ClientState, RoundScheduler, SyncFedAvg
+from repro.core.task import ClassifierTask, ClientTask
 from repro.models.classifiers import init_classifier
 
 Pytree = Any
@@ -101,15 +102,22 @@ class RoundRecord:
 
 
 class FederatedRun:
-    """One FL experiment over the paper's small collaborator models.
+    """One FL experiment over any :class:`~repro.core.task.ClientTask` —
+    the paper's collaborator classifiers (``ClassifierTask``) or a real
+    ``configs/`` zoo transformer (``LMDeltaTask``, DESIGN.md §14).
 
-    ``scheduler`` selects the orchestration policy; ``SyncFedAvg`` (default)
-    is the seed behavior. Per-client state (error-feedback residuals, model
-    versions) lives in ``self.clients`` and is shared across schedulers."""
+    ``task`` owns model init / local training / evaluation; this class and
+    its ``scheduler`` own everything codec-, byte-, and schedule-shaped.
+    Passing a ``ClassifierConfig`` as ``task`` still works (deprecation
+    shim: it is wrapped in a ``ClassifierTask``, bit-identical to the
+    pre-task runtime). ``scheduler`` selects the orchestration policy;
+    ``SyncFedAvg`` (default) is the seed behavior. Per-client state
+    (error-feedback residuals, model versions) lives in ``self.clients``
+    and is shared across schedulers."""
 
     def __init__(
         self,
-        clf_cfg: ClassifierConfig,
+        task: "ClientTask | ClassifierConfig",
         datasets: Sequence[Dict[str, jnp.ndarray]],
         fl_cfg: FLConfig,
         compressors: Optional[Sequence[Compressor]] = None,
@@ -120,7 +128,14 @@ class FederatedRun:
         soa_state: bool = False,
         ring_depth: Optional[int] = None,
     ):
-        self.clf_cfg = clf_cfg
+        if isinstance(task, ClassifierConfig):
+            # pre-task call sites passed the classifier config directly;
+            # wrap it so they (and their checkpoints) keep working
+            task = ClassifierTask(task)
+        self.task = task
+        # back-compat attribute: None for non-classifier tasks
+        self.clf_cfg = getattr(task, "clf_cfg", None)
+        task.check_config(fl_cfg)
         self.datasets = list(datasets)
         self.cfg = fl_cfg
         n = len(self.datasets)
@@ -129,8 +144,8 @@ class FederatedRun:
         assert len(compressors) == n
         self.compressors = list(compressors)
         self.eval_data = eval_data
-        self.global_params = init_classifier(
-            jax.random.PRNGKey(fl_cfg.seed), clf_cfg)
+        self.global_params = task.init_params(
+            jax.random.PRNGKey(fl_cfg.seed))
         if soa_state:
             # struct-of-arrays client state (DESIGN.md §12.1): same
             # ClientState attribute surface via views, stacked device
@@ -228,7 +243,8 @@ class FederatedRun:
                           [c.codec_params() for c in self.compressors]),
             ratecontrol=((rc.state_meta(), rc.state_tree())
                          if rc is not None else None),
-            scheduler_state=self.scheduler.state_dict())
+            scheduler_state=self.scheduler.state_dict(),
+            extra={"task": self.task.checkpoint_key()})
 
     def load_state(self, path: str) -> int:
         """Restore a checkpoint into this (freshly constructed) run;
@@ -238,8 +254,21 @@ class FederatedRun:
         checkpoint's scheduler state, falling back to a simulation restart
         only for legacy checkpoints without one. Returns the next round
         index."""
-        from repro.checkpoint.checkpoint import load_federated_state
+        from repro.checkpoint.checkpoint import (_peek_meta,
+                                                 load_federated_state)
         rc = self.ratecontrol
+        # checkpoints are keyed on the task (DESIGN.md §14.3): restoring a
+        # different task/arch would try to unravel the saved trees into the
+        # wrong pytree, so refuse BEFORE touching any state. Legacy
+        # checkpoints carry no key and load as before (all pre-task
+        # checkpoints are classifier).
+        saved_task = _peek_meta(path).get("task")
+        if saved_task is not None and saved_task != self.task.checkpoint_key():
+            raise ValueError(
+                f"task mismatch: checkpoint was saved by task "
+                f"{saved_task!r} but this run's task is "
+                f"{self.task.checkpoint_key()!r} — params cannot be "
+                "restored; rebuild the run with the matching task")
         rnd, params, meta = load_federated_state(
             path, self.global_params,
             like_codec_params=(None if rc is not None else

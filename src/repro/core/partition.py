@@ -152,6 +152,47 @@ def by_layer_partition(template: Pytree,
         (k, tuple(v)) for k, v in grouped.items()))
 
 
+# Transformer role taxonomy for the ``configs/`` model zoo (DESIGN.md §14):
+# four coarse groups that want different codec rungs — the giant embedding
+# matrices, the attention/mixer projections, the MLP/expert blocks, and
+# the tiny norm vectors that should never pay AE distortion. Component
+# checks run outermost-first so e.g. ``layers/mixer/conv_w`` lands in
+# ``attention`` (the mixer is the sequence-mixing block in SSM/hybrid
+# archs) before any inner key can match.
+_ROLE_NORM_KEYS = ("ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm")
+
+
+def role_of_path(path: str) -> str:
+    """Map a ``/``-joined pytree path to its architectural role:
+    ``embedding`` | ``attention`` | ``mlp`` | ``norm`` (``other`` only for
+    trees outside the zoo's vocabulary). Covers every ``configs/`` family:
+    dense/MoE/VLM blocks, SSM and hybrid mixers, audio encoder/decoder."""
+    for comp in path.split("/"):
+        if comp in ("embed", "lm_head", "pos_embed") or \
+                comp.startswith("embed"):
+            return "embedding"
+        if comp in _ROLE_NORM_KEYS or "norm" in comp:
+            return "norm"
+        if "attn" in comp or comp == "mixer":
+            return "attention"
+        if comp in ("ffn", "mlp") or "expert" in comp or \
+                "router" in comp or "moe" in comp:
+            return "mlp"
+    return "other"
+
+
+def by_role_partition(template: Pytree,
+                      key_fn: Callable[[str], str] = role_of_path
+                      ) -> PartitionMap:
+    """Partition a real model pytree by architectural role — embedding vs
+    attention vs MLP vs norm — so each role can ride a different codec
+    rung (chunked-AE on the bulk roles, cheap quantize on norms). Thin
+    wrapper over :func:`by_layer_partition` with :func:`role_of_path` as
+    the grouping key; property tests assert the groups tile every zoo
+    config's param tree with no ``other`` leftovers."""
+    return by_layer_partition(template, key_fn=key_fn)
+
+
 # =====================================================================
 # full spec: structure + one codec per group (a CodecSpec union member)
 # =====================================================================

@@ -51,7 +51,6 @@ from repro.core.aggregate import (apply_update, normalize_weights,
                                   staleness_weights)
 from repro.core.compressor import (codec_stats, ef_compensate, ef_residual,
                                    tree_bytes)
-from repro.core.prepass import evaluate, local_train, local_train_batched
 
 Pytree = Any
 
@@ -111,23 +110,18 @@ class EncodedUpdate:
 
 def _client_round(run, ci: int, global_params: Pytree, round_seed: int
                   ) -> EncodedUpdate:
-    """One collaborator's full local round against ``global_params``: train,
-    build the payload (weights or update), error-feedback compensate,
-    encode. Operation order is identical to the seed ``FederatedRun.run``
-    body so ``SyncFedAvg`` reproduces it (to float tolerance — the fused
-    one-call server reduction reassociates vs the seed's op chain)."""
+    """One collaborator's full local round against ``global_params``: train
+    (via the run's :class:`~repro.core.task.ClientTask`), build the payload
+    (weights or update), error-feedback compensate, encode. Operation order
+    is identical to the seed ``FederatedRun.run`` body so ``SyncFedAvg``
+    reproduces it (to float tolerance — the fused one-call server reduction
+    reassociates vs the seed's op chain)."""
     cfg = run.cfg
     data = run.datasets[ci]
     state = run.clients[ci]
-    local, _, hist = local_train(
-        global_params, run.clf_cfg, data,
-        epochs=cfg.local_epochs, lr=cfg.lr,
-        batch_size=cfg.batch_size, seed=round_seed,
-        optimizer=cfg.optimizer,
-        prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
-        anchor=global_params)
-    return _encode_local(run, ci, local, global_params, state,
-                         hist[-1] if hist else {})
+    local, metrics = run.task.local_update(
+        global_params, data, cfg, seed=round_seed, anchor=global_params)
+    return _encode_local(run, ci, local, global_params, state, metrics)
 
 
 def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
@@ -167,7 +161,7 @@ def _encode_local(run, ci: int, local: Pytree, global_params: Pytree,
     if cfg.error_feedback:
         decoded = unravel(codec.decode(spec, params, payload))
         state.residual = ef_residual(payload_tree, decoded)
-    weight = float(run.datasets[ci]["x"].shape[0])
+    weight = run.task.data_weight(run.datasets[ci])
     return EncodedUpdate(payload=payload, spec=spec, params=params,
                          weight=weight, stats=stats, metrics=metrics)
 
@@ -291,7 +285,7 @@ def _finish_record(run, r: int, metrics, bytes_up, bytes_raw, ratios,
     from repro.core.federated import RoundRecord
     gmetrics = {}
     if run.eval_data is not None:
-        gmetrics = evaluate(run.global_params, run.clf_cfg, run.eval_data)
+        gmetrics = run.task.evaluate(run.global_params, run.eval_data)
     return RoundRecord(
         round=r, collab_metrics=metrics, global_metrics=gmetrics,
         bytes_up=bytes_up, bytes_up_raw=bytes_raw,
@@ -398,26 +392,14 @@ class SampledSync(RoundScheduler):
 
     def _cohort_locals(self, cohort: List[int], r: int) -> Optional[list]:
         """vmap fast path: returns per-client trained params, or None when
-        the cohort is ragged (shapes differ) and the loop must be used."""
+        the cohort is ragged (shapes differ), the task has no batched
+        path, and the loop must be used."""
         run, cfg = self.run, self.run.cfg
         if not self.use_vmap or len(cohort) < 2:
             return None
-        shapes = [jax.tree_util.tree_map(lambda x: x.shape,
-                                         run.datasets[ci]) for ci in cohort]
-        if any(s != shapes[0] for s in shapes[1:]):
-            return None
-        stacked_data = {
-            k: jnp.stack([run.datasets[ci][k] for ci in cohort])
-            for k in run.datasets[cohort[0]]}
-        stacked, _metrics = local_train_batched(
-            run.global_params, run.clf_cfg, stacked_data,
-            epochs=cfg.local_epochs, lr=cfg.lr, batch_size=cfg.batch_size,
-            seed=cfg.seed * 997 + r, optimizer=cfg.optimizer,
-            prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
-            anchor=run.global_params)
-        locals_ = [jax.tree_util.tree_map(lambda x, i=i: x[i], stacked)
-                   for i in range(len(cohort))]
-        return list(zip(locals_, _metrics))
+        return run.task.local_update_batched(
+            run.global_params, [run.datasets[ci] for ci in cohort], cfg,
+            seed=cfg.seed * 997 + r, anchor=run.global_params)
 
     def run_round(self, r: int):
         run, cfg = self.run, self.run.cfg

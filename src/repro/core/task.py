@@ -1,0 +1,311 @@
+"""Client tasks: the model-side half of the federated runtime (DESIGN.md §14).
+
+Until this refactor ``FederatedRun`` was hard-wired to the paper's toy
+classifier — ``init_classifier`` in its ctor, ``local_train``/``evaluate``
+calls inside every scheduler. :class:`ClientTask` extracts that coupling
+into a strategy object so the runtime (schedulers, codecs, lifecycle, rate
+control, checkpointing) is model-agnostic:
+
+* :class:`ClassifierTask` — the paper's small collaborator models
+  (MNIST MLP / CIFAR CNN). Delegates to the exact ``prepass`` functions the
+  schedulers used to call directly, with identical argument plumbing and
+  seed streams, so pre-refactor trajectories replay **bit-for-bit**
+  (golden-trajectory + resume-matrix tests pass unmodified).
+* :class:`LMDeltaTask` — federated delta fine-tuning of a real
+  ``configs/`` transformer (dense/MoE/SSM/hybrid/audio zoo): each client
+  runs a few steps of next-token training on its own token shard and ships
+  the post-error-feedback weight *delta* through the existing codec stack
+  (``FLConfig(payload="update")`` enforced — the refit distribution the AE
+  lifecycle buffers is deltas, the right codec target at LM shapes).
+
+The protocol is intentionally small — everything the schedulers touch:
+
+* ``init_params(key)``         — the global model pytree
+* ``local_update(...)``        — one client's local training round
+* ``local_update_batched(...)``— optional vmapped cohort fast path
+  (``None`` = scheduler falls back to the sequential loop)
+* ``evaluate(params, data)``   — global-model metrics for RoundRecords
+* ``make_batches(...)``        — the task's minibatch stream
+* ``data_weight(data)``        — FedAvg sample weight of a client shard
+* ``checkpoint_key()``         — task identity stored in checkpoints so a
+  resume into a different task/arch is refused instead of silently
+  unraveling params into the wrong tree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class ClientTask:
+    """Strategy interface binding a model family to the federated runtime.
+
+    Subclasses own model init, local training, and evaluation; the runtime
+    owns everything codec/byte/schedule-shaped. All methods take the run's
+    ``FLConfig`` where training hyperparameters live (``local_epochs``,
+    ``lr``, ``batch_size``, ``optimizer``, ``aggregation``/``prox_mu``)."""
+
+    name = "base"
+
+    # ------------------------------------------------------------- model
+    def init_params(self, key: jax.Array) -> Pytree:
+        """The global model pytree this federation trains."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- training
+    def local_update(self, params: Pytree, data: Dict[str, jnp.ndarray],
+                     cfg, *, seed: int, anchor: Optional[Pytree] = None
+                     ) -> Tuple[Pytree, Dict[str, float]]:
+        """One client's local round: train ``params`` on ``data`` and
+        return ``(trained params, final metrics)``. ``anchor`` is the
+        round-start global model (the FedProx proximal target)."""
+        raise NotImplementedError
+
+    def local_update_batched(self, params: Pytree,
+                             datasets: List[Dict[str, jnp.ndarray]],
+                             cfg, *, seed: int,
+                             anchor: Optional[Pytree] = None
+                             ) -> Optional[List[Tuple[Pytree,
+                                                      Dict[str, float]]]]:
+        """Cohort fast path: train every client of a homogeneous cohort in
+        one vmapped dispatch. Return ``None`` (the default) when the task
+        has no batched path or the cohort is ragged — the scheduler falls
+        back to per-client :meth:`local_update` calls."""
+        return None
+
+    # -------------------------------------------------------- evaluation
+    def evaluate(self, params: Pytree, data: Dict[str, jnp.ndarray]
+                 ) -> Dict[str, float]:
+        """Global-model metrics on held-out ``data`` (RoundRecord's
+        ``global_metrics``)."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- data
+    def make_batches(self, seed: int, data: Dict[str, jnp.ndarray],
+                     batch_size: int) -> Iterator[Dict[str, jnp.ndarray]]:
+        """One epoch of shuffled minibatches over a client shard."""
+        raise NotImplementedError
+
+    def num_examples(self, data: Dict[str, jnp.ndarray]) -> int:
+        raise NotImplementedError
+
+    def data_weight(self, data: Dict[str, jnp.ndarray]) -> float:
+        """FedAvg weight of a client's shard (sample count by default)."""
+        return float(self.num_examples(data))
+
+    # ------------------------------------------------------------- hooks
+    def check_config(self, cfg) -> None:
+        """Validate an ``FLConfig`` against this task (ctor-time hook)."""
+
+    def checkpoint_key(self) -> str:
+        """Stable identity stored in checkpoint metadata; a load whose
+        saved key differs from the resuming run's task is refused."""
+        return self.name
+
+
+# =====================================================================
+# the paper's collaborator models, extracted verbatim from the schedulers
+# =====================================================================
+@dataclasses.dataclass
+class ClassifierTask(ClientTask):
+    """The paper's small collaborator models (``configs.paper``): thin
+    delegation to ``prepass.local_train``/``local_train_batched``/
+    ``evaluate`` with the exact argument plumbing the schedulers inlined
+    before the task extraction — same seed streams, same jit caches, same
+    FedProx gating — so trajectories are bit-identical to the pre-task
+    runtime (asserted by the golden-trajectory fixture and the
+    ClassifierTask differential test)."""
+
+    clf_cfg: Any                        # configs.paper.ClassifierConfig
+    name: str = "classifier"
+
+    def init_params(self, key: jax.Array) -> Pytree:
+        from repro.models.classifiers import init_classifier
+        return init_classifier(key, self.clf_cfg)
+
+    def local_update(self, params, data, cfg, *, seed, anchor=None):
+        from repro.core.prepass import local_train
+        local, _, hist = local_train(
+            params, self.clf_cfg, data,
+            epochs=cfg.local_epochs, lr=cfg.lr,
+            batch_size=cfg.batch_size, seed=seed,
+            optimizer=cfg.optimizer,
+            prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
+            anchor=anchor)
+        return local, (hist[-1] if hist else {})
+
+    def local_update_batched(self, params, datasets, cfg, *, seed,
+                             anchor=None):
+        from repro.core.prepass import local_train_batched
+        shapes = [jax.tree_util.tree_map(lambda x: x.shape, d)
+                  for d in datasets]
+        if any(s != shapes[0] for s in shapes[1:]):
+            return None
+        stacked_data = {k: jnp.stack([d[k] for d in datasets])
+                        for k in datasets[0]}
+        stacked, metrics = local_train_batched(
+            params, self.clf_cfg, stacked_data,
+            epochs=cfg.local_epochs, lr=cfg.lr, batch_size=cfg.batch_size,
+            seed=seed, optimizer=cfg.optimizer,
+            prox_mu=(cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0),
+            anchor=anchor)
+        locals_ = [jax.tree_util.tree_map(lambda x, i=i: x[i], stacked)
+                   for i in range(len(datasets))]
+        return list(zip(locals_, metrics))
+
+    def evaluate(self, params, data):
+        from repro.core.prepass import evaluate
+        return evaluate(params, self.clf_cfg, data)
+
+    def make_batches(self, seed, data, batch_size):
+        from repro.data.pipeline import batches
+        return batches(seed, data, batch_size)
+
+    def num_examples(self, data) -> int:
+        return int(data["x"].shape[0])
+
+    def checkpoint_key(self) -> str:
+        # hidden sizes pin the param-tree structure a checkpoint must
+        # unravel into; activation etc. don't change shapes but a mismatch
+        # there is still a different experiment — refuse those too
+        return f"classifier:{getattr(self.clf_cfg, 'name', 'clf')}"
+
+
+# =====================================================================
+# federated delta fine-tuning of the real model zoo
+# =====================================================================
+# jitted LM-step cache, mirroring prepass._BATCHED_STEP_CACHE: keyed on
+# everything baked into the trace so every client of every round is a
+# cache HIT after the first trace (params/opt state/batch are arguments).
+_LM_STEP_CACHE: Dict[Any, Any] = {}
+
+
+def _lm_step(arch_cfg, optimizer: str, lr: float, prox_mu: float,
+             frozen_roles: Tuple[str, ...]):
+    key = (arch_cfg, optimizer, lr, prox_mu, frozen_roles)
+    cached = _LM_STEP_CACHE.get(key)
+    if cached is not None:
+        return cached
+    from repro.models import model as model_lib
+    from repro.optim.optimizers import make_optimizer
+    opt = make_optimizer(optimizer, lr)
+
+    def loss_fn(p, batch, anchor):
+        loss, metrics = model_lib.train_loss(p, arch_cfg, batch)
+        if prox_mu > 0.0:
+            sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                jax.tree_util.tree_leaves(p),
+                jax.tree_util.tree_leaves(anchor)))
+            loss = loss + 0.5 * prox_mu * sq
+        return loss, metrics
+
+    @jax.jit
+    def step(p, s, batch, anchor, mask):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch, anchor)
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)
+        p, s = opt.update(p, grads, s)
+        return p, s, metrics
+
+    _LM_STEP_CACHE[key] = (opt, step)
+    return opt, step
+
+
+@dataclasses.dataclass
+class LMDeltaTask(ClientTask):
+    """Federated delta/LoRA-style fine-tuning of a ``configs/`` zoo model.
+
+    Each client shard is a token corpus ``{"tokens": (n, S), "labels":
+    (n, S)}`` (``data.pipeline.synthetic_lm_batch`` produces one); a local
+    round runs ``cfg.local_epochs`` epochs of jitted next-token training
+    drawn from the same ``batch_indices`` stream the classifier path uses.
+    The task requires ``FLConfig(payload="update")`` — what crosses the
+    wire is the post-EF weight *delta*, which is what the chunked-AE
+    codecs refit on and the right target for quantize/top-k stages.
+
+    ``freeze_roles`` masks gradients for whole parameter roles (as named
+    by :func:`repro.core.partition.role_of_path` — e.g. ``("embedding",)``
+    freezes the embedding/LM-head matrices), the LoRA-flavored knob:
+    frozen roles ship exact-zero deltas, so their partition groups
+    compress to nothing under any sparsifying stage while the payload
+    keeps the full model structure."""
+
+    arch_cfg: Any                       # configs.base.ArchConfig
+    freeze_roles: Tuple[str, ...] = ()
+    name: str = "lm_delta"
+
+    def __post_init__(self):
+        self._mask = None               # built lazily from the param tree
+        self._eval_fn = None
+
+    def init_params(self, key: jax.Array) -> Pytree:
+        from repro.models import model as model_lib
+        return model_lib.init_params(key, self.arch_cfg)
+
+    def _grad_mask(self, params: Pytree) -> Pytree:
+        if self._mask is None:
+            from repro.core.partition import role_of_path
+            from repro.core.partition import _key_str
+            frozen = set(self.freeze_roles)
+
+            def leaf_mask(path, leaf):
+                name = "/".join(_key_str(p) for p in path)
+                keep = role_of_path(name) not in frozen
+                return jnp.asarray(1.0 if keep else 0.0, leaf.dtype)
+
+            self._mask = jax.tree_util.tree_map_with_path(leaf_mask, params)
+        return self._mask
+
+    def local_update(self, params, data, cfg, *, seed, anchor=None):
+        from repro.data.pipeline import batch_indices
+        prox = (cfg.prox_mu if cfg.aggregation == "fedprox" else 0.0)
+        opt, step = _lm_step(self.arch_cfg, cfg.optimizer, cfg.lr,
+                             prox if anchor is not None else 0.0,
+                             tuple(self.freeze_roles))
+        mask = self._grad_mask(params)
+        anchor_arg = anchor if anchor is not None else params
+        state = opt.init(params)
+        n = self.num_examples(data)
+        last = None
+        for epoch in range(cfg.local_epochs):
+            # same seed stream as the classifier path: epoch-keyed shuffles
+            for sel in batch_indices(seed * 1000 + epoch, n,
+                                     cfg.batch_size):
+                batch = {k: v[sel] for k, v in data.items()}
+                params, state, last = step(params, state, batch,
+                                           anchor_arg, mask)
+        metrics = ({} if last is None
+                   else {k: float(v) for k, v in last.items()})
+        return params, metrics
+
+    def evaluate(self, params, data):
+        if self._eval_fn is None:
+            from repro.models import model as model_lib
+            arch_cfg = self.arch_cfg
+            self._eval_fn = jax.jit(
+                lambda p, b: model_lib.train_loss(p, arch_cfg, b))
+        _, metrics = self._eval_fn(params, data)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def make_batches(self, seed, data, batch_size):
+        from repro.data.pipeline import batch_indices
+        n = self.num_examples(data)
+        for sel in batch_indices(seed, n, batch_size):
+            yield {k: v[sel] for k, v in data.items()}
+
+    def num_examples(self, data) -> int:
+        return int(data["tokens"].shape[0])
+
+    def check_config(self, cfg) -> None:
+        if cfg.payload != "update":
+            raise ValueError(
+                "LMDeltaTask ships weight deltas — construct the run with "
+                f"FLConfig(payload='update'), got payload={cfg.payload!r}")
+
+    def checkpoint_key(self) -> str:
+        return f"lm_delta:{self.arch_cfg.name}"

@@ -144,3 +144,84 @@ def test_resume_matrix_soa(sched, rc, layout, tmp_path):
     snapshots + residual block round-trip through the checkpoint) and the
     vectorized arrival engine, under the same bytes+trajectory bar."""
     _run_cell(sched, rc, layout, tmp_path, soa=True)
+
+
+# =====================================================================
+# task-generic cells (DESIGN.md §14): LMDeltaTask save/load with a real
+# transformer pytree, eager and SoA, plus eager↔SoA cross-restore
+# =====================================================================
+from repro.configs.base import ArchConfig          # noqa: E402
+from repro.core import LMDeltaTask                 # noqa: E402
+from repro.data.pipeline import synthetic_lm_batch  # noqa: E402
+
+LM_CFG = ArchConfig(name="resume-lm", family="dense", n_layers=1,
+                    d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=64, tie_embeddings=True,
+                    param_dtype="float32", compute_dtype="float32",
+                    remat=False, zero1=False)
+
+
+def _lm_data():
+    shards = [synthetic_lm_batch(seed=10 + i, vocab_size=64, batch=4,
+                                 seq_len=16) for i in range(N_CLIENTS)]
+    ev = synthetic_lm_batch(seed=99, vocab_size=64, batch=4, seq_len=16)
+    return shards, ev
+
+
+def _mk_lm(sched, n_rounds, data, ev, soa=False):
+    cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, batch_size=2,
+                   payload="update", error_feedback=True)
+    return FederatedRun(
+        LMDeltaTask(LM_CFG), data, cfg,
+        compressors=[QuantizeCompressor(bits=8) for _ in range(N_CLIENTS)],
+        eval_data=ev, scheduler=_scheduler(sched), soa_state=soa)
+
+
+def _run_lm_cell(sched, tmp_path, soa=False, resume_soa=None):
+    """Same bar as _run_cell over transformer params; ``resume_soa``
+    (when not None) constructs the resuming run with a different state
+    layout than the saving one — the checkpoint's layout must win."""
+    if resume_soa is None:
+        resume_soa = soa
+    data, ev = _lm_data()
+    full = _mk_lm(sched, 2, data, ev, soa=soa)
+    hist_full = full.run()
+
+    first = _mk_lm(sched, 1, data, ev, soa=soa)
+    first.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    first.save_state(path)
+
+    resumed = _mk_lm(sched, 1, data, ev, soa=resume_soa)
+    assert resumed.load_state(path) == 1
+    hist_resumed = resumed.run()
+
+    for x, y in zip(jax.tree_util.tree_leaves(full.global_params),
+                    jax.tree_util.tree_leaves(resumed.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for a, b in zip(hist_full[1:], hist_resumed):
+        assert a.round == b.round
+        assert a.bytes_up == b.bytes_up
+        assert a.bytes_up_raw == b.bytes_up_raw
+        assert a.bytes_down == b.bytes_down
+        assert a.participants == b.participants
+        assert a.staleness == b.staleness
+        assert a.sim_time == b.sim_time
+        assert a.global_metrics == b.global_metrics
+
+
+@pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
+def test_resume_matrix_lm(sched, tmp_path):
+    _run_lm_cell(sched, tmp_path)
+
+
+@pytest.mark.parametrize("sched", ["sampled", "async-vector"])
+def test_resume_matrix_lm_soa(sched, tmp_path):
+    _run_lm_cell(sched, tmp_path, soa=True)
+
+
+@pytest.mark.parametrize("save_soa,load_soa", [(False, True), (True, False)])
+def test_resume_matrix_lm_cross_restore(save_soa, load_soa, tmp_path):
+    """Checkpoint layout — not the resuming run's ctor flag — decides the
+    restore format, task-generically (DESIGN.md §12.4 over §14 pytrees)."""
+    _run_lm_cell("sync", tmp_path, soa=save_soa, resume_soa=load_soa)

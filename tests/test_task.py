@@ -1,0 +1,185 @@
+"""ClientTask protocol (DESIGN.md §14): the ClassifierTask differential
+(task-wrapped runs bit-identical to config-passing runs), task-keyed
+checkpoints, the by_role_partition property over the whole config zoo, and
+LMDeltaTask basics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ArchConfig
+from repro.configs.paper import MNIST_CLASSIFIER
+from repro.core import (ClassifierTask, FLConfig, FederatedRun,
+                        LMDeltaTask, QuantizeCompressor, SampledSync,
+                        by_role_partition, role_of_path)
+from repro.data.pipeline import (mnist_like, synthetic_lm_batch,
+                                 train_eval_split, uniform_partition)
+from repro.models import init_params, param_count
+
+N_CLIENTS = 3
+
+LM_CFG = ArchConfig(name="task-lm", family="dense", n_layers=1, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    vocab_size=64, tie_embeddings=True,
+                    param_dtype="float32", compute_dtype="float32",
+                    remat=False, zero1=False)
+
+
+def _clf_data():
+    train, ev = train_eval_split(mnist_like(0, 128), 32)
+    return uniform_partition(0, train, N_CLIENTS), ev
+
+
+def _mk_clf(task_or_cfg, n_rounds, data, ev, scheduler=None):
+    cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update",
+                   error_feedback=True)
+    return FederatedRun(
+        task_or_cfg, data, cfg,
+        compressors=[QuantizeCompressor(bits=8) for _ in range(N_CLIENTS)],
+        eval_data=ev, scheduler=scheduler)
+
+
+# =====================================================================
+# differential: explicit ClassifierTask ≡ the pre-task config ctor
+# =====================================================================
+@pytest.mark.parametrize("sched", ["sync", "sampled"])
+def test_classifier_task_bit_identical(sched):
+    data, ev = _clf_data()
+    mk_sched = {"sync": lambda: None,
+                "sampled": lambda: SampledSync(cohort=2)}[sched]
+    a = _mk_clf(MNIST_CLASSIFIER, 2, data, ev, scheduler=mk_sched())
+    b = _mk_clf(ClassifierTask(MNIST_CLASSIFIER), 2, data, ev,
+                scheduler=mk_sched())
+    ha, hb = a.run(), b.run()
+    for x, y in zip(jax.tree_util.tree_leaves(a.global_params),
+                    jax.tree_util.tree_leaves(b.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for ra, rb in zip(ha, hb):
+        assert ra.bytes_up == rb.bytes_up
+        assert ra.bytes_up_raw == rb.bytes_up_raw
+        assert ra.bytes_down == rb.bytes_down
+        assert ra.participants == rb.participants
+        assert ra.global_metrics == rb.global_metrics
+
+
+def test_classifier_shim_sets_task_and_clf_cfg():
+    data, ev = _clf_data()
+    run = _mk_clf(MNIST_CLASSIFIER, 1, data, ev)
+    assert isinstance(run.task, ClassifierTask)
+    assert run.clf_cfg is MNIST_CLASSIFIER
+
+
+def test_classifier_batched_path_gates_on_ragged_shapes():
+    data, _ = _clf_data()
+    task = ClassifierTask(MNIST_CLASSIFIER)
+    cfg = FLConfig(local_epochs=1)
+    params = task.init_params(jax.random.PRNGKey(0))
+    out = task.local_update_batched(params, data, cfg, seed=0,
+                                    anchor=params)
+    assert out is not None and len(out) == len(data)
+    ragged = [data[0], {k: v[:-1] for k, v in data[1].items()}]
+    assert task.local_update_batched(params, ragged, cfg, seed=0,
+                                     anchor=params) is None
+
+
+# =====================================================================
+# task-keyed checkpoints
+# =====================================================================
+def test_checkpoint_task_mismatch_refused(tmp_path):
+    data, ev = _clf_data()
+    run = _mk_clf(MNIST_CLASSIFIER, 1, data, ev)
+    run.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    run.save_state(path)
+
+    shards = [synthetic_lm_batch(seed=i, vocab_size=64, batch=4, seq_len=16)
+              for i in range(N_CLIENTS)]
+    lm = FederatedRun(
+        LMDeltaTask(LM_CFG), shards,
+        FLConfig(n_rounds=1, local_epochs=1, payload="update"),
+        compressors=[QuantizeCompressor(bits=8) for _ in range(N_CLIENTS)])
+    with pytest.raises(ValueError, match="task mismatch"):
+        lm.load_state(path)
+
+
+def test_checkpoint_roundtrip_keeps_task_key(tmp_path):
+    data, ev = _clf_data()
+    run = _mk_clf(ClassifierTask(MNIST_CLASSIFIER), 1, data, ev)
+    run.run()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    run.save_state(path)
+    again = _mk_clf(MNIST_CLASSIFIER, 1, data, ev)   # shim-built task
+    assert again.load_state(path) == 1               # same key → accepted
+
+
+# =====================================================================
+# by_role_partition tiles every zoo config's param tree
+# =====================================================================
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_by_role_partition_tiles_zoo(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pmap = by_role_partition(params)     # PartitionMap asserts tiling
+    assert pmap.size == param_count(params)
+    assert set(pmap.names) <= {"embedding", "attention", "mlp", "norm"}
+    assert "other" not in pmap.names
+    # every family has all four roles present
+    assert {"embedding", "norm"} <= set(pmap.names)
+
+
+def test_role_of_path_vocabulary():
+    assert role_of_path("embed") == "embedding"
+    assert role_of_path("lm_head") == "embedding"
+    assert role_of_path("final_norm") == "norm"
+    assert role_of_path("layers/attn/wq") == "attention"
+    assert role_of_path("layers/sub0/mixer/conv_w") == "attention"
+    assert role_of_path("layers/ffn/w1") == "mlp"
+    assert role_of_path("layers/sub1/mlp/w1") == "mlp"
+    assert role_of_path("layers/ln1/scale") == "norm"
+    assert role_of_path("something/unknown") == "other"
+
+
+# =====================================================================
+# LMDeltaTask basics
+# =====================================================================
+def test_lm_task_requires_update_payload():
+    shards = [synthetic_lm_batch(seed=i, vocab_size=64, batch=4, seq_len=16)
+              for i in range(N_CLIENTS)]
+    with pytest.raises(ValueError, match="payload"):
+        FederatedRun(LMDeltaTask(LM_CFG), shards,
+                     FLConfig(n_rounds=1, payload="weights"))
+
+
+def test_lm_task_surface():
+    task = LMDeltaTask(LM_CFG)
+    data = synthetic_lm_batch(seed=0, vocab_size=64, batch=8, seq_len=16)
+    assert task.num_examples(data) == 8
+    assert task.data_weight(data) == 8.0
+    batches = list(task.make_batches(0, data, batch_size=4))
+    assert sum(b["tokens"].shape[0] for b in batches) == 8
+    params = task.init_params(jax.random.PRNGKey(0))
+    metrics = task.evaluate(params, data)
+    assert np.isfinite(metrics["ce_loss"])
+    cfg = FLConfig(local_epochs=1, batch_size=4)
+    local, m = task.local_update(params, data, cfg, seed=0, anchor=params)
+    assert np.isfinite(m["ce_loss"])
+    # training moved the params
+    moved = any(float(jnp.abs(a - b).max()) > 0
+                for a, b in zip(jax.tree_util.tree_leaves(local),
+                                jax.tree_util.tree_leaves(params)))
+    assert moved
+
+
+def test_lm_task_freeze_roles_zero_delta():
+    task = LMDeltaTask(LM_CFG, freeze_roles=("embedding",))
+    data = synthetic_lm_batch(seed=0, vocab_size=64, batch=4, seq_len=16)
+    params = task.init_params(jax.random.PRNGKey(0))
+    cfg = FLConfig(local_epochs=1, batch_size=2)
+    local, _ = task.local_update(params, data, cfg, seed=0, anchor=params)
+    np.testing.assert_array_equal(np.asarray(local["embed"]),
+                                  np.asarray(params["embed"]))
+    assert float(jnp.abs(local["layers"]["ffn"]["w_gate"]
+                         - params["layers"]["ffn"]["w_gate"]).max()) > 0
