@@ -524,24 +524,32 @@ def table_ae_train() -> List[Row]:
 # on the Dirichlet non-IID split: fixed rungs vs the adaptive policies
 # =====================================================================
 def table_fl_rate_control() -> List[Row]:
-    """Every fixed ladder rung vs DistortionTarget vs ByteBudget on the
-    same non-IID federation: the frontier the paper's 'can be modified
-    based on the accuracy requirements' claim (§4.2) promises. Each row
-    reports final accuracy, uplink bytes, decoder-sync bytes (rung-switch
-    re-ships included), and the rung switches taken — an adaptive policy
-    earns its place by landing below the fixed-rung frontier (fewer total
-    bytes at matched accuracy)."""
+    """Every fixed ladder rung vs DistortionTarget vs ByteBudget vs
+    Lagrangian RDBudget on the same non-IID federation: the frontier the
+    paper's 'can be modified based on the accuracy requirements' claim
+    (§4.2) promises. Each policy row reports final accuracy, uplink
+    bytes, decoder-sync bytes (rung-switch re-ships included), and the
+    rung switches taken — an adaptive policy earns its place by landing
+    below the fixed-rung frontier (fewer total bytes at matched
+    accuracy). The zero-µs ``pareto_*`` rows emit the per-round frontier
+    (accuracy vs cumulative bytes at matched budgets, greedy vs RD vs
+    fixed) into the committed JSON artifact; the regression gate only
+    times positive-µs rows, so these ride along as data
+    (DESIGN.md §15.6)."""
     from repro.configs.paper import MNIST_CLASSIFIER
     from repro.core import (ByteBudget, DistortionTarget, FLConfig,
-                            FederatedRun, FixedRate, fc_ae_ladder,
-                            run_prepass, train_autoencoder)
+                            FederatedRun, FixedRate, RDBudget,
+                            fc_ae_ladder, run_prepass, train_autoencoder)
     from repro.configs.paper import AEConfig
     from repro.data.pipeline import (dirichlet_partition, mnist_like,
                                      train_eval_split)
 
     n_clients = 4
     latents = (8, 32, 128)
-    hidden = (16,)
+    # hidden must be ≥ the widest latent: a narrower hidden layer
+    # bottlenecks every rung to the same effective capacity and rung
+    # fidelity stops ordering by latent width (the frontier collapses)
+    hidden = (128,)
     rounds = 6 if FULL else 3
     train, ev = train_eval_split(mnist_like(0, 1024 if FULL else 512), 128)
     data = dirichlet_partition(0, train, n_clients, alpha=0.5,
@@ -550,20 +558,28 @@ def table_fl_rate_control() -> List[Row]:
     # one pre-pass per client for the weights dataset, then every ladder
     # rung's AE trained on it (paper Fig. 2 protocol, per rung; enough
     # epochs that rung fidelity orders by latent width — an undertrained
-    # ladder turns the frontier into noise)
+    # ladder turns the frontier into noise). The pre-pass MUST start from
+    # the same initial global params the federated run below inits with
+    # (FLConfig.seed): AEs trained on a foreign init's trajectory price a
+    # basin the run never visits — every rung probes garbage and the
+    # frontier degenerates (DESIGN.md §15.6)
+    from repro.models.classifiers import init_classifier
     P = 15_910
+    init0 = init_classifier(jax.random.PRNGKey(FLConfig().seed),
+                            MNIST_CLASSIFIER)
     params = []
     for ci in range(n_clients):
         out = run_prepass(jax.random.PRNGKey(10 + ci), MNIST_CLASSIFIER,
                           AEConfig(input_dim=P, encoder_hidden=hidden,
                                    latent_dim=latents[0]),
-                          data[ci], prepass_epochs=6, ae_epochs=1)
+                          data[ci], prepass_epochs=24, ae_epochs=1,
+                          init_params=init0)
         row = []
         for latent in latents:
             cfg = AEConfig(input_dim=P, encoder_hidden=hidden,
                            latent_dim=latent)
             p, _ = train_autoencoder(jax.random.PRNGKey(100 + ci), cfg,
-                                     out["weights_dataset"], epochs=150)
+                                     out["weights_dataset"], epochs=300)
             row.append(p)
         params.append(row)
 
@@ -574,21 +590,27 @@ def table_fl_rate_control() -> List[Row]:
     policies = [(f"fixed_r{k}", lambda k=k: FixedRate(ladder=ladder(),
                                                       initial_rung=k))
                 for k in range(len(latents))]
+    matched_budget = n_clients * latents[1] * 4.0   # greedy ≡ RD budgets
     policies += [
         ("distortion_target", lambda: DistortionTarget(
             ladder=ladder(), target=0.15, min_snapshots=2, cooldown=2,
             refit_epochs=20, refit_batch=4)),
         ("byte_budget", lambda: ByteBudget(
-            ladder=ladder(), budget=n_clients * latents[1] * 4.0,
+            ladder=ladder(), budget=matched_budget,
+            min_snapshots=2, refit_epochs=20, refit_batch=4)),
+        ("rd_budget", lambda: RDBudget(
+            ladder=ladder(), budget=matched_budget, cooldown=2,
             min_snapshots=2, refit_epochs=20, refit_batch=4)),
     ]
     rows: List[Row] = []
+    pareto: List[Row] = []
     for name, mk in policies:
         t0 = time.perf_counter()
+        rc = mk()
         run = FederatedRun(
             MNIST_CLASSIFIER, data,
             FLConfig(n_rounds=rounds, local_epochs=2, payload="weights"),
-            eval_data=ev, ratecontrol=mk())
+            eval_data=ev, ratecontrol=rc)
         hist = run.run()
         wall = (time.perf_counter() - t0) * 1e6
         tot = run.total_bytes()
@@ -598,7 +620,20 @@ def table_fl_rate_control() -> List[Row]:
                      f"up={tot['bytes_up'] / 1e3:.1f}kB "
                      f"dec={tot['bytes_decoder'] / 1e3:.0f}kB "
                      f"switches={switches}"))
-    return rows
+        lam_by_round = dict(getattr(rc, "lambda_trace", []))
+        cum_up = cum_dec = 0.0
+        for rec in hist:
+            cum_up += rec.bytes_up
+            cum_dec += rec.bytes_decoder or 0.0
+            lam_r = lam_by_round.get(rec.round)
+            lam = (f" lambda={lam_r:.3e}"
+                   if name == "rd_budget" and lam_r is not None else "")
+            pareto.append((
+                f"pareto_{name}_r{rec.round}", 0.0,
+                f"acc={rec.global_metrics['accuracy']:.4f} "
+                f"cum_up_kB={cum_up / 1e3:.2f} "
+                f"cum_dec_kB={cum_dec / 1e3:.2f}{lam}"))
+    return rows + pareto
 
 
 # =====================================================================

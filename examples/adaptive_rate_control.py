@@ -18,7 +18,11 @@ target:
    charged to ``RoundRecord.bytes_down``/``bytes_decoder``, so the Eq. 4–6
    reconciliation (``savings.reconcile``) stays honest under rung churn,
 4. heterogeneous-rung cohorts are grouped by spec server-side and each
-   group still takes the fused decode→aggregate path (DESIGN.md §9.2).
+   group still takes the fused decode→aggregate path (DESIGN.md §9.2),
+5. the same ladder then runs under the Lagrangian :class:`RDBudget`
+   water-filler (DESIGN.md §15): distortion probed at every rung in one
+   batched dispatch, curves hull-pruned, λ swept until marginal
+   distortion per byte is equalized under the shared uplink budget.
 
 Run: PYTHONPATH=src python examples/adaptive_rate_control.py
 """
@@ -26,15 +30,18 @@ import jax
 
 from repro.configs.paper import MNIST_CLASSIFIER, AEConfig
 from repro.core import (DistortionTarget, FLConfig, FederatedRun,
-                        SavingsModel, ae_param_count, fc_ae_ladder,
-                        run_prepass, train_autoencoder)
+                        RDBudget, SavingsModel, ae_param_count,
+                        fc_ae_ladder, run_prepass, train_autoencoder)
 from repro.data.pipeline import (dirichlet_partition, mnist_like,
                                  train_eval_split)
+from repro.models.classifiers import init_classifier
 
 N_CLIENTS = 3
 P = 15_910                         # MNIST classifier param count
 LATENTS = (32, 128)
-HIDDEN = (64,)
+# hidden ≥ widest latent, or the hidden layer caps every rung at the same
+# effective capacity and rung fidelity stops ordering (DESIGN.md §15.6)
+HIDDEN = (128,)
 
 
 def main():
@@ -43,13 +50,19 @@ def main():
                                min_per_client=32)
 
     # pre-pass per client, then every ladder rung's AE trained on the same
-    # weights dataset (paper Fig. 2, per rung)
+    # weights dataset (paper Fig. 2, per rung). The pre-pass starts from
+    # the SAME initial global params the federated runs below init with
+    # (FLConfig.seed) — an AE trained on a foreign init's trajectory
+    # prices a weight basin the run never visits (DESIGN.md §15.6)
+    init0 = init_classifier(jax.random.PRNGKey(FLConfig().seed),
+                            MNIST_CLASSIFIER)
     params = []
     for ci in range(N_CLIENTS):
         out = run_prepass(jax.random.PRNGKey(10 + ci), MNIST_CLASSIFIER,
                           AEConfig(input_dim=P, encoder_hidden=HIDDEN,
                                    latent_dim=LATENTS[0]),
-                          data[ci], prepass_epochs=8, ae_epochs=1)
+                          data[ci], prepass_epochs=8, ae_epochs=1,
+                          init_params=init0)
         row = []
         for latent in LATENTS:
             cfg = AEConfig(input_dim=P, encoder_hidden=HIDDEN,
@@ -96,6 +109,35 @@ def main():
     print(f"\n{report['decoder_syncs']:.0f} decoder ships (initial + rung "
           f"switches) reconcile with Eq. 5/6 at "
           f"{report['decoder_rel_err']:.1%} error")
+
+    # --- the same ladder under Lagrangian water-filling (DESIGN.md §15)
+    # budget: the all-cheapest floor plus one rung upgrade's worth of
+    # marginal uplink — the λ sweep decides WHICH client converts that
+    # headroom into the most distortion reduction per byte
+    budget = N_CLIENTS * LATENTS[0] * 4.0 + (LATENTS[1] - LATENTS[0]) * 4.0
+    rd = RDBudget(ladder=fc_ae_ladder(N_CLIENTS, P, latent_dims=LATENTS,
+                                      hidden=HIDDEN, params=params),
+                  budget=budget, cooldown=2, min_snapshots=2,
+                  refit_epochs=30, refit_batch=4)
+    run_rd = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=6, local_epochs=2, payload="weights"),
+        eval_data=ev, ratecontrol=rd)
+    hist_rd = run_rd.run()
+    lam = dict(rd.lambda_trace)
+    print(f"\nRDBudget at {budget:.0f} B/round shared uplink budget:")
+    print("round  acc    bytes_up   lambda*        rungs")
+    for r in hist_rd:
+        lam_s = f"{lam[r.round]:.3e}" if lam.get(r.round) else "-"
+        print(f"{r.round:>5}  {r.global_metrics['accuracy']:.3f}  "
+              f"{r.bytes_up:>8.0f}  {lam_s:>9}  "
+              f"{[rd.rung_of(ci) for ci in range(N_CLIENTS)]}")
+    assert all(r.controller == "rd_budget" for r in hist_rd)
+    # the plan binds the full sync cohort, so realized per-round uplink
+    # never exceeds the budget
+    assert all(r.bytes_up <= budget for r in hist_rd), \
+        [(r.round, r.bytes_up) for r in hist_rd]
+    assert len(rd.lambda_trace) == len(hist_rd)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@ communication for federated learning, as a composable JAX library."""
 from repro.core.aggregate import (  # noqa: F401
     apply_update,
     buffered_aggregate,
+    distortion_weights,
     fedavg,
     normalize_weights,
     staleness_weights,
@@ -74,6 +75,7 @@ from repro.core.ratecontrol import (  # noqa: F401
     DistortionTarget,
     FixedRate,
     RateController,
+    RDBudget,
     fc_ae_ladder,
     partition_ladder,
 )

@@ -98,6 +98,24 @@ def staleness_weights(base_weights: Sequence[float],
             for w, s in zip(base_weights, staleness)]
 
 
+def distortion_weights(base_weights: Sequence[float],
+                       distortions: Sequence[Optional[float]],
+                       power: float = 1.0) -> List[float]:
+    """Distortion discount for the async buffer (DESIGN.md §15.5): an
+    update that rode a lossier codec carries less signal, so its weight is
+    scaled by ``d_i = (1 + e_i) ** -power`` where ``e_i`` is the client's
+    probed current-rung relative reconstruction error
+    (``RateController.distortion_of``). Composes with
+    :func:`staleness_weights` into the coherent
+    ``w_i * (1 + s_i)^-p * d_i`` discount; ``None`` distortion (client not
+    probed yet, or no controller) leaves the weight untouched, and
+    ``power=0`` recovers plain staleness weighting. Renormalization inside
+    :func:`weighted_mean` means only the relative discount matters."""
+    assert len(base_weights) == len(distortions)
+    return [w if e is None else w * float(1 + e) ** (-power)
+            for w, e in zip(base_weights, distortions)]
+
+
 def buffered_aggregate(global_params: Pytree, updates: Sequence[Pytree],
                        base_weights: Sequence[float],
                        staleness: Sequence[int], *,

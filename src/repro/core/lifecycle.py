@@ -212,9 +212,15 @@ class AELifecycle:
                                     st.snapshots,
                                     st.last_refresh, st.ae_baseline):
                 todo.append(ci)
+        rc = getattr(run, "ratecontrol", None)
         for lane, new_params in self._refit(run, r, todo):
             comp = self._lane_comp(run, lane)
             comp.params = new_params
+            if rc is not None:
+                # the active rung's probe is honest from here on — unfit
+                # gating in the rate policies keys off this (DESIGN.md
+                # §15.2)
+                rc.note_refit(lane)
             if isinstance(lane, tuple):
                 ci, name = lane
                 st = run.clients[ci]

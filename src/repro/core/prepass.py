@@ -179,13 +179,22 @@ def run_prepass(
     lr: float = 1e-3,
     seed: int = 0,
     collect_updates: bool = False,
+    init_params: Optional[Pytree] = None,
 ) -> Dict[str, Any]:
     """Full pre-pass for one collaborator: local training → weights dataset →
     AE training (the jit-native scan trainer, DESIGN.md §8.1).
     ``collect_updates=True`` stores per-epoch *deltas* from the initial
-    weights instead of raw weights (the FL-mode codec target)."""
+    weights instead of raw weights (the FL-mode codec target).
+    ``init_params`` starts local training from given weights instead of a
+    fresh init — the paper's Fig. 2 protocol trains each AE on the weight
+    dataset of the model being federated, so a pre-pass that seeds a rate
+    ladder for a run must start from THAT run's initial global params:
+    weights from a foreign random init live in a different basin and the
+    resulting AEs price a trajectory the run never visits
+    (DESIGN.md §15.6)."""
     k_model, k_ae = jax.random.split(rng)
-    params0 = init_classifier(k_model, clf_cfg)
+    params0 = (init_params if init_params is not None
+               else init_classifier(k_model, clf_cfg))
     flat0, _ = ravel_pytree(params0)
 
     params, snaps, history = local_train(

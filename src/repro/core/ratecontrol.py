@@ -29,6 +29,14 @@ operating point a first-class *policy*:
     budget across the observed cohort: everyone starts on the cheapest
     rung and marginal bytes go to the clients whose current-rung
     reconstruction drift is largest.
+  - :class:`RDBudget` — Lagrangian rate-distortion water-filling of the
+    same budget (DESIGN.md §15): every movable lane's distortion-vs-bytes
+    curve is probed across ALL rungs in one batched dispatch, pruned to
+    its lower convex hull, and the multiplier λ swept until marginal
+    distortion per byte is equalized across lanes — with switch-time
+    decoder re-ships amortized into each rung's price. Greedy
+    :class:`ByteBudget` stays as the comparison baseline / differential
+    oracle.
 
 * a switch onto an AE rung triggers a refit of that rung's AE on the
   client's snapshot buffer through the existing ``AELifecycle`` cohort path
@@ -44,6 +52,8 @@ operating point a first-class *policy*:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import heapq
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -79,7 +89,10 @@ def fc_ae_ladder(n_clients: int, input_dim: int,
     quantization (the §4.2 "orthogonal add-on"). ``params[ci][k]`` supplies
     pre-trained AE params (e.g. from a pre-pass); omitted rungs start at a
     fresh per-(client, rung) init and rely on the switch-time refit
-    (DESIGN.md §9.1)."""
+    (DESIGN.md §9.1). Seeded rungs are marked ``prefit`` so the policies'
+    distortion probes trust them immediately; fresh-init rungs stay unfit
+    until a refit lands — their probes measure garbage and are gated out
+    of scoring (DESIGN.md §15.2)."""
     assert list(latent_dims) == sorted(latent_dims), (
         "ladder rungs must be ordered cheapest-uplink-first "
         f"(ascending latent dims), got {latent_dims}")
@@ -89,13 +102,16 @@ def fc_ae_ladder(n_clients: int, input_dim: int,
         for k, latent in enumerate(latent_dims):
             cfg = AEConfig(input_dim=input_dim, encoder_hidden=hidden,
                            latent_dim=latent)
-            if params is not None and params[ci][k] is not None:
+            seeded = params is not None and params[ci][k] is not None
+            if seeded:
                 p = params[ci][k]
             else:
                 p = ae.init_fc_ae(
                     jax.random.PRNGKey(
                         (seed * 1_000_003 + ci * 1009 + k) % 2 ** 31), cfg)
-            comp: Compressor = FCAECompressor(p, cfg)
+            inner = FCAECompressor(p, cfg)
+            inner.prefit = seeded
+            comp: Compressor = inner
             if bits is not None:
                 comp = ComposedCompressor(comp, bits=bits)
             row.append(comp)
@@ -126,6 +142,184 @@ def partition_ladder(n_clients: int, pmap,
                    for factory in rung_factories[name]]
             for name in pmap.names})
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("specs",))
+def _batched_rel_errs(specs: Tuple[Any, ...], params_cols, flats
+                      ) -> jax.Array:
+    """The whole (rung × lane) distortion matrix in ONE device dispatch
+    (DESIGN.md §15.1): ``flats`` stacks the probed lanes' newest snapshots
+    ``(L, n)``, ``params_cols[k]`` stacks every lane's rung-``k`` codec
+    params along a leading axis (or is None for parameterless codecs), and
+    each rung's ``_rel_recon_err`` is vmapped over lanes under one jit.
+    Specs are static (they key the jit cache exactly like the fused server
+    decode), so the per-round cost is one dispatch + one host transfer
+    instead of the L·R blocking ``float()`` syncs the per-lane probes paid
+    — retraced only when the cohort size changes."""
+    rows = []
+    for spec, prm in zip(specs, params_cols):
+        if prm is None:
+            rows.append(jax.vmap(
+                lambda f, spec=spec: _rel_recon_err(spec, None, f))(flats))
+        else:
+            rows.append(jax.vmap(
+                lambda p, f, spec=spec: _rel_recon_err(spec, p, f))(
+                    prm, flats))
+    return jnp.stack(rows)
+
+
+def _rung_prefit(comp: Compressor) -> bool:
+    """Whether a rung's distortion probe is honest from round 0: pointwise
+    codecs are deterministic (always), AE-backed rungs only when their
+    params came from a real fit (``prefit`` set by :func:`fc_ae_ladder`
+    when pre-pass params are supplied). Fresh-init AE rungs measure
+    garbage until a refit lands (DESIGN.md §15.2)."""
+    sub = comp.ae_compressor()
+    return sub is None or bool(getattr(sub, "prefit", False))
+
+
+def _hull_prune(points: List[Tuple[int, float, float, float]]
+                ) -> List[Tuple[int, float, float, float]]:
+    """Lower-convex-hull filter for one lane's rate-distortion curve
+    (DESIGN.md §15.3). ``points`` are ``(rung, cost, price, dist)``
+    operating points — ``cost`` the uplink wire bytes, ``price`` the
+    allocation axis (cost plus any amortized decoder-ship charge),
+    ``dist`` the probed relative distortion. Dominated points (pricier,
+    no less distorted) fall away; interior points beaten by skipping
+    straight past them are pruned so the surviving step gains are
+    non-increasing along the curve — the premise of the λ sweep.
+    Collinear points are KEPT: equal-slope curves keep single-rung steps,
+    which is what makes the allocator coincide with greedy
+    :class:`ByteBudget` on affine equal-slope ladders (the differential
+    contract, tests/test_rd_allocator.py). "Above the chord" carries a
+    relative tolerance — probed distortions arrive through float math, and
+    a point sitting 1 ulp above an exactly-collinear chord must not lose
+    its single-rung step to rounding noise."""
+    pts = sorted(points, key=lambda p: (p[2], p[3], p[0]))
+    mono: List[Tuple[int, float, float, float]] = []
+    for p in pts:
+        if mono and p[3] >= mono[-1][3]:
+            continue                      # dominated: pricier, not better
+        mono.append(p)
+    hull: List[Tuple[int, float, float, float]] = []
+    for p in mono:
+        while len(hull) >= 2:
+            a, b = hull[-2], hull[-1]
+            direct = (a[3] - p[3]) / (p[2] - a[2])
+            through = (a[3] - b[3]) / (b[2] - a[2])
+            if direct > through * (1.0 + 1e-9):  # b above the chord a→p
+                hull.pop()
+            else:
+                break
+        hull.append(p)
+    return hull
+
+
+def _quantized_gain(gain: float) -> float:
+    """Collapse float-noise gain differences (7 significant digits) so
+    near-tied hull steps fall through to the deterministic greedy
+    tie-break ``(step, -drift, lane)`` instead of being ordered by
+    rounding error — affine equal-slope ladders must replay
+    :class:`ByteBudget`'s pass order exactly."""
+    return float(f"{gain:.6e}")
+
+
+def _lane_sort_key(ln) -> Tuple:
+    """Heap-comparable lane id: flat lanes are ints, partitioned lanes
+    ``(client, group)`` tuples — normalize both to tuples."""
+    return ln if isinstance(ln, tuple) else (ln,)
+
+
+def _rd_waterfill(curves: Dict[Any, Tuple[List[Tuple[int, float, float,
+                                                     float]], float]],
+                  budget: float, fixed_spend: float
+                  ) -> Tuple[Optional[Dict[Any, int]], Optional[float]]:
+    """Sweep the Lagrangian multiplier over every lane's hull steps
+    (DESIGN.md §15.3). ``curves[lane] = (hull, tiebreak)`` where ``hull``
+    is that lane's pruned curve and ``tiebreak`` its current-rung drift
+    (mirrors greedy's ordering when gains tie). Every lane starts at its
+    cheapest hull point; a heap merges the lanes' next steps and takes
+    them in descending marginal-distortion-per-price-byte order until the
+    uplink budget is exhausted — because hull gains are non-increasing
+    per lane, this greedy merge IS the λ sweep: the gain of the last
+    accepted step is the equalized multiplier λ*. A lane's step ``i+1``
+    only enters the heap once step ``i`` is accepted (in-lane order holds
+    structurally, independent of rounding), and gains are quantized for
+    ordering (:func:`_quantized_gain`) so noise-tied steps resolve by
+    greedy's ``(step, -drift, lane)`` tie-break. A lane whose next step
+    no longer fits is done (its later steps start from a point never
+    reached). Budget feasibility is checked in true uplink ``cost``;
+    ordering uses the ship-amortized ``price``. Returns
+    ``(hull index per lane, λ*)``, or ``(None, None)`` when even the
+    all-cheapest floor overflows."""
+    take = {ln: 0 for ln in curves}
+    spent = fixed_spend + sum(h[0][1] for h, _ in curves.values())
+    if spent > budget:
+        return None, None
+
+    def step(ln, i):
+        hull, score = curves[ln]
+        if i >= len(hull):
+            return None
+        gain = ((hull[i - 1][3] - hull[i][3])
+                / (hull[i][2] - hull[i - 1][2]))
+        key = (-_quantized_gain(gain), i, -score, _lane_sort_key(ln))
+        return (key, gain, i, ln, hull[i][1] - hull[i - 1][1])
+
+    heap = [s for ln in curves if (s := step(ln, 1)) is not None]
+    heapq.heapify(heap)
+    lam = None
+    while heap:
+        _key, gain, i, ln, dcost = heapq.heappop(heap)
+        if spent + dcost > budget:
+            continue                      # lane done: later steps unreachable
+        take[ln] = i
+        spent += dcost
+        lam = gain
+        nxt = step(ln, i + 1)
+        if nxt is not None:
+            heapq.heappush(heap, nxt)
+    return take, lam
+
+
+def _rd_topup(raw: Dict[Any, List[Tuple[int, float, float, float]]],
+              chosen: Dict[Any, Tuple[int, float, float, float]],
+              budget: float, spent: float) -> Optional[float]:
+    """Integer-allocation top-up after the hull sweep (DESIGN.md §15.3).
+    Hull steps are whole rungs, and decoder-ship pricing can bend a
+    lane's curve concave at its middle rungs — the hull then keeps only
+    a multi-rung jump, and when that jump no longer fits the budget the
+    lane strands its share unspent even though a pruned INTERIOR rung
+    would fit and still cut distortion (greedy's one-rung walk reaches
+    it; the λ sweep alone cannot). Greedily spend the remainder on the
+    best affordable raw-point upgrade — marginal distortion per priced
+    byte, feasibility in true cost bytes, deterministic lane tie-break
+    so the allocation stays invariant to cohort enumeration order.
+    Mutates ``chosen`` in place; returns the gain of the last accepted
+    upgrade (the effective shadow price once off-hull points are in
+    play), or None when nothing affordable improved."""
+    lam = None
+    while True:
+        best = None
+        for ln in sorted(raw, key=_lane_sort_key):
+            cpt = chosen[ln]
+            for p in raw[ln]:
+                if p[3] >= cpt[3]:
+                    continue              # not a distortion improvement
+                if spent + (p[1] - cpt[1]) > budget:
+                    continue              # true uplink cost infeasible
+                dprice = p[2] - cpt[2]
+                gain = ((cpt[3] - p[3]) / dprice if dprice > 0
+                        else float("inf"))
+                key = (-_quantized_gain(gain), _lane_sort_key(ln), p[0])
+                if best is None or key < best[0]:
+                    best = (key, ln, p, gain)
+        if best is None:
+            return lam
+        _, ln, p, gain = best
+        spent += p[1] - chosen[ln][1]
+        chosen[ln] = p
+        lam = gain
 
 
 @dataclasses.dataclass
@@ -212,6 +406,14 @@ class RateController:
         assert all(a <= b for a, b in zip(self._costs, self._costs[1:])), (
             "ladder rungs must be ordered cheapest-uplink-first, got wire "
             f"costs {self._costs}")
+        # per-(client, rung) fitted flags (DESIGN.md §15.2): pointwise
+        # rungs are always honest, AE rungs only once pre-pass seeded or
+        # refit — unfit rungs measure garbage and are gated out of scoring
+        self._fitted = np.array(
+            [[_rung_prefit(c) for c in row] for row in self._comps],
+            dtype=bool)
+        self._last_err: Dict[int, float] = {}
+        self.probe_dispatches = 0
 
     def _bind_partitioned(self, run, n: int) -> None:
         """Per-partition ladders (DESIGN.md §10.3): the unit of control is
@@ -285,6 +487,15 @@ class RateController:
             assert all(a <= b for a, b in zip(costs, costs[1:])), (
                 f"group {name!r} rungs must be ordered "
                 f"cheapest-uplink-first, got wire costs {costs}")
+        # per-(lane, rung) fitted flags, one packed (n, rungs) bool array
+        # per group — same gating as the flat ladder (DESIGN.md §15.2)
+        self._pfitted = {
+            name: np.array([[_rung_prefit(c)
+                             for c in self._pcomps[ci][name]]
+                            for ci in range(n)], dtype=bool)
+            for name in names}
+        self._last_err: Dict[int, float] = {}
+        self.probe_dispatches = 0
 
     # ------------------------------------------------------------------
     def rung_of(self, ci: int) -> int:
@@ -380,6 +591,7 @@ class RateController:
             comp = run.compressors[ci].ae_compressor()
             if ci in refit:
                 comp.params = refit[ci]
+                self._fitted[ci, int(self._rung[ci])] = True
             st = run.clients[ci]
             st.last_refresh = r
             st.ae_baseline = lc._lane_baseline(run, ci)
@@ -427,6 +639,7 @@ class RateController:
             comp = partitioned(run.compressors[ci]).ae_groups()[name]
             if lane in refit:
                 comp.params = refit[lane]
+                self._pfitted[name][ci, int(self._prung[name][ci])] = True
             st = run.clients[ci]
             st.part_last_refresh[name] = r
             st.part_baseline[name] = lc._lane_baseline(run, lane)
@@ -437,9 +650,97 @@ class RateController:
         return bytes_dec, synced, switches
 
     # ------------------------------------------------------------------
+    def note_refit(self, lane) -> None:
+        """Lifecycle hook: a refresh refit just landed on ``lane``'s
+        active rung, so its distortion probe is trustworthy from here on
+        (DESIGN.md §15.2). Called by ``AELifecycle.end_of_round`` for
+        cadence/drift refreshes; switch-time refits mark themselves."""
+        if isinstance(lane, tuple):
+            ci, name = lane
+            if getattr(self, "_partitioned", False) and name in self._pfitted:
+                self._pfitted[name][ci, int(self._prung[name][ci])] = True
+            return
+        if not getattr(self, "_partitioned", False):
+            self._fitted[lane, int(self._rung[lane])] = True
+
+    def distortion_of(self, ci: int) -> Optional[float]:
+        """Latest probed current-rung relative distortion of client ``ci``
+        (group-size-weighted across lanes for partitioned ladders), or
+        None until the policy has probed them — the ``d_i`` source for the
+        async scheduler's distortion-weighted staleness discount
+        (DESIGN.md §15.5)."""
+        return self._last_err.get(int(ci))
+
+    # ------------------------------------------------------------------
+    def _probe_all(self, run, lanes: List[int]) -> np.ndarray:
+        """Distortion of EVERY ladder rung for every probed client from
+        one batched device dispatch + one host transfer (DESIGN.md §15.1),
+        replacing the per-(client, rung) blocking ``float()`` probes: the
+        cohort's newest snapshots stack lane-major, each rung's per-client
+        codec params stack alongside, and :func:`_batched_rel_errs` vmaps
+        the lifecycle probe over lanes inside a single jit. Returns the
+        ``(n_rungs, len(lanes))`` numpy matrix and caches the current-rung
+        row for :meth:`distortion_of`."""
+        flats = jnp.stack([run.clients[ci].snapshots[-1] for ci in lanes])
+        specs = tuple(self._comps[lanes[0]][k].spec(self._n)
+                      for k in range(self.n_rungs))
+        cols = []
+        for k in range(self.n_rungs):
+            ps = [self._comps[ci][k].codec_params() for ci in lanes]
+            cols.append(None if ps[0] is None else jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ps))
+        self.probe_dispatches += 1
+        errs = np.asarray(_batched_rel_errs(specs, tuple(cols), flats))
+        for j, ci in enumerate(lanes):
+            self._last_err[ci] = float(errs[int(self._rung[ci]), j])
+        return errs
+
+    def _probe_all_lanes(self, run, lanes: List[Tuple[int, str]]
+                         ) -> Dict[Tuple[int, str], np.ndarray]:
+        """Per-partition twin of :meth:`_probe_all`: lanes group by
+        partition name (segment sizes differ across groups) and each
+        group's (rung × lane) matrix comes from one batched dispatch —
+        L·R blocking probes collapse to one dispatch/transfer per group.
+        Returns each lane's per-rung error column and caches a
+        group-size-weighted current-rung distortion per client."""
+        out: Dict[Tuple[int, str], np.ndarray] = {}
+        acc: Dict[int, List[Tuple[float, float]]] = {}
+        by_name: Dict[str, List[int]] = {}
+        for ci, name in lanes:
+            by_name.setdefault(name, []).append(ci)
+        for name, cis in sorted(by_name.items()):
+            gsize = self.partition.group_size(name)
+            flats = jnp.stack([run.clients[ci].part_snapshots[name][-1]
+                               for ci in cis])
+            specs = tuple(self._pcomps[cis[0]][name][k].spec(gsize)
+                          for k in range(self._pnrungs[name]))
+            cols = []
+            for k in range(self._pnrungs[name]):
+                ps = [self._pcomps[ci][name][k].codec_params()
+                      for ci in cis]
+                cols.append(None if ps[0] is None else
+                            jax.tree_util.tree_map(
+                                lambda *xs: jnp.stack(xs), *ps))
+            self.probe_dispatches += 1
+            errs = np.asarray(_batched_rel_errs(specs, tuple(cols), flats))
+            for j, ci in enumerate(cis):
+                out[(ci, name)] = errs[:, j]
+                acc.setdefault(ci, []).append(
+                    (float(errs[int(self._prung[name][ci]), j]),
+                     float(gsize)))
+        for ci, pairs in acc.items():
+            tot = sum(w for _, w in pairs)
+            self._last_err[ci] = sum(e * w for e, w in pairs) / max(tot,
+                                                                    1.0)
+        return out
+
+    # ------------------------------------------------------------------
     def _rung_err(self, run, ci: int, rung: int, flat: jax.Array) -> float:
         """Observed relative reconstruction error of ``flat`` through the
-        given rung's codec (the lifecycle's scale-free fidelity probe)."""
+        given rung's codec (the lifecycle's scale-free fidelity probe).
+        One blocking host sync per call — kept as the differential oracle
+        for :meth:`_probe_all` (tests); the policies plan off the batched
+        matrix (DESIGN.md §15.1)."""
         comp = self._comps[ci][rung]
         spec = comp.spec(flat.shape[0])
         return float(_rel_recon_err(spec, comp.codec_params(), flat))
@@ -477,7 +778,12 @@ class RateController:
     # ------------------------------------------------------------------
     def state_meta(self) -> Dict[str, Any]:
         # JSON shape unchanged from the list-based layout (per-client dicts
-        # for lanes, flat int lists otherwise) so old checkpoints restore
+        # for lanes, flat int lists otherwise) so old checkpoints restore;
+        # the fitted flags + cached distortions (DESIGN.md §15.2/§15.5)
+        # ride as extra keys so a resumed run gates and discounts exactly
+        # like the uninterrupted one
+        dist = {str(ci): float(e)
+                for ci, e in sorted(self._last_err.items())}
         if self._partitioned:
             n = len(self._pcomps)
             return {"name": self.name, "partitioned": True,
@@ -486,10 +792,16 @@ class RateController:
                              for ci in range(n)],
                     "last_switch": [{name: int(arr[ci])
                                      for name, arr in self._plast.items()}
-                                    for ci in range(n)]}
+                                    for ci in range(n)],
+                    "fitted": [{name: [bool(x) for x in arr[ci]]
+                                for name, arr in self._pfitted.items()}
+                               for ci in range(n)],
+                    "distortion": dist}
         return {"name": self.name,
                 "rung": [int(x) for x in self._rung],
-                "last_switch": [int(x) for x in self._last_switch]}
+                "last_switch": [int(x) for x in self._last_switch],
+                "fitted": [[bool(x) for x in row] for row in self._fitted],
+                "distortion": dist}
 
     def state_tree(self) -> Pytree:
         if self._partitioned:
@@ -519,6 +831,14 @@ class RateController:
                                   for d in meta["last_switch"]],
                                  dtype=np.int64)
                 for name in self.partition.names}
+            if "fitted" in meta:     # absent in pre-§15 checkpoints
+                self._pfitted = {
+                    name: np.asarray([[bool(x) for x in d[name]]
+                                      for d in meta["fitted"]], dtype=bool)
+                    for name in self.partition.names}
+            self._last_err = {int(k): float(v)
+                              for k, v in meta.get("distortion",
+                                                   {}).items()}
             for ci, row in enumerate(tree["codecs"]):
                 for name, rungs in row.items():
                     for k, entry in enumerate(rungs):
@@ -538,6 +858,12 @@ class RateController:
                                 dtype=np.int64)
         self._last_switch = np.asarray(
             [int(x) for x in meta["last_switch"]], dtype=np.int64)
+        if "fitted" in meta:         # absent in pre-§15 checkpoints
+            self._fitted = np.asarray([[bool(x) for x in row]
+                                       for row in meta["fitted"]],
+                                      dtype=bool)
+        self._last_err = {int(k): float(v)
+                          for k, v in meta.get("distortion", {}).items()}
         for ci, row in enumerate(tree["codecs"]):
             for k, entry in enumerate(row):
                 if entry.get("params") is not None:
@@ -570,7 +896,14 @@ class DistortionTarget(RateController):
     the argmin — matters because an unfit AE rung measures garbage error
     until its switch-time refit has run; stepping explores one refit at a
     time (DESIGN.md §9.1). ``cooldown`` is the minimum number of rounds a
-    client stays on a rung between switches."""
+    client stays on a rung between switches.
+
+    All rung errors for the eligible cohort come from ONE batched probe
+    dispatch per round (:meth:`RateController._probe_all`, DESIGN.md
+    §15.1). A step DOWN additionally requires the cheaper neighbor to be
+    *fitted* — an unfit AE rung's garbage reading can spuriously qualify
+    and must never win a move (DESIGN.md §15.2); stepping UP keeps the
+    exploration semantics above (the switch refit fits the target rung)."""
 
     target: float = 0.1
     margin: float = 0.7
@@ -584,27 +917,31 @@ class DistortionTarget(RateController):
             # stack steps up without dragging the head along
             # (DESIGN.md §10.3)
             moves: Dict[Tuple[int, str], int] = {}
-            for ci, name in self._eligible_lanes(run, r, participants,
-                                                 self.cooldown):
-                seg = run.clients[ci].part_snapshots[name][-1]
+            lanes = self._eligible_lanes(run, r, participants,
+                                         self.cooldown)
+            if not lanes:
+                return moves
+            errs = self._probe_all_lanes(run, lanes)
+            for ci, name in lanes:
                 cur = int(self._prung[name][ci])
-                err = self._lane_rung_err(ci, name, cur, seg)
-                if err > self.target and cur + 1 < self._pnrungs[name]:
+                col = errs[(ci, name)]
+                if col[cur] > self.target and cur + 1 < self._pnrungs[name]:
                     moves[(ci, name)] = cur + 1
-                elif (cur > 0 and self._lane_rung_err(ci, name, cur - 1,
-                                                      seg)
-                        <= self.margin * self.target):
+                elif (cur > 0 and self._pfitted[name][ci, cur - 1]
+                        and col[cur - 1] <= self.margin * self.target):
                     moves[(ci, name)] = cur - 1
             return moves
         moves: Dict[int, int] = {}
-        for ci in self._eligible(run, r, participants, self.cooldown):
-            flat = run.clients[ci].snapshots[-1]
+        parts = self._eligible(run, r, participants, self.cooldown)
+        if not parts:
+            return moves
+        errs = self._probe_all(run, parts)
+        for j, ci in enumerate(parts):
             cur = int(self._rung[ci])
-            err = self._rung_err(run, ci, cur, flat)
-            if err > self.target and cur + 1 < self.n_rungs:
+            if errs[cur, j] > self.target and cur + 1 < self.n_rungs:
                 moves[ci] = cur + 1
-            elif (cur > 0 and self._rung_err(run, ci, cur - 1, flat)
-                    <= self.margin * self.target):
+            elif (cur > 0 and self._fitted[ci, cur - 1]
+                    and errs[cur - 1, j] <= self.margin * self.target):
                 moves[ci] = cur - 1
         return moves
 
@@ -622,10 +959,22 @@ class ByteBudget(RateController):
     costs come from ``codec.wire_bytes`` (DESIGN.md §9.1), so the planned
     round uplink is exactly what the next round's records observe when the
     cohort repeats; under partial participation it tracks to the extent
-    cohorts overlap (documented in DESIGN.md §9.1)."""
+    cohorts overlap (documented in DESIGN.md §9.1).
+
+    Drift scores for the whole cohort come from ONE batched probe dispatch
+    per round (DESIGN.md §15.1); a lane whose *current* rung has never
+    been fitted scores 0 — a fictional drift reading must not win marginal
+    bytes (DESIGN.md §15.2). ``switch_hysteresis`` closes the decoder
+    flapping hole: with ``cooldown=0`` a budget hovering at a rung
+    boundary used to flip clients on/off an AE rung every round, shipping
+    a full decoder (``bytes_down``) per upward flip while only uplink was
+    budgeted. After ANY switch, a lane must now sit ``switch_hysteresis``
+    rounds before the greedy may move it onto an AE rung ABOVE its current
+    one; downgrades (never ship) are never blocked (DESIGN.md §15.4)."""
 
     budget: float = float("inf")
     cooldown: int = 0
+    switch_hysteresis: int = 2
     name: str = "byte_budget"
 
     def plan(self, run, r: int, participants: List[int]) -> Dict:
@@ -640,9 +989,10 @@ class ByteBudget(RateController):
         # would systematically over-spend the round
         fixed_spend = sum(self._costs[self._rung[ci]]
                           for ci in set(participants) - set(parts))
-        score = {ci: self._rung_err(run, ci, self._rung[ci],
-                                    run.clients[ci].snapshots[-1])
-                 for ci in parts}
+        errs = self._probe_all(run, parts)
+        score = {ci: (float(errs[int(self._rung[ci]), j])
+                      if self._fitted[ci, int(self._rung[ci])] else 0.0)
+                 for j, ci in enumerate(parts)}
         order = sorted(parts, key=lambda ci: (-score[ci], ci))
         alloc = {ci: 0 for ci in parts}
         spent = fixed_spend + self._costs[0] * len(parts)
@@ -655,6 +1005,11 @@ class ByteBudget(RateController):
                 nxt = alloc[ci] + 1
                 if nxt >= self.n_rungs:
                     continue
+                if (nxt > int(self._rung[ci])
+                        and self._comps[ci][nxt].ae_compressor() is not None
+                        and r - int(self._last_switch[ci])
+                        < self.switch_hysteresis):
+                    continue         # decoder re-ship hysteresis (§15.4)
                 delta = self._costs[nxt] - self._costs[alloc[ci]]
                 if spent + delta <= self.budget:
                     alloc[ci] = nxt
@@ -681,10 +1036,12 @@ class ByteBudget(RateController):
         frozen = [ln for ln in all_lanes if ln not in lane_set]
         fixed_spend = sum(self._pcosts[name][self._prung[name][ci]]
                           for ci, name in frozen)
+        errs = self._probe_all_lanes(run, lanes)
         score = {
-            (ci, name): self._lane_rung_err(
-                ci, name, int(self._prung[name][ci]),
-                run.clients[ci].part_snapshots[name][-1])
+            (ci, name): (float(errs[(ci, name)][int(self._prung[name][ci])])
+                         if self._pfitted[name][ci,
+                                               int(self._prung[name][ci])]
+                         else 0.0)
             for ci, name in lanes}
         order = sorted(lanes, key=lambda ln: (-score[ln], ln))
         alloc = {ln: 0 for ln in lanes}
@@ -697,10 +1054,16 @@ class ByteBudget(RateController):
         while changed:
             changed = False
             for ln in order:
-                _, name = ln
+                ci, name = ln
                 nxt = alloc[ln] + 1
                 if nxt >= self._pnrungs[name]:
                     continue
+                if (nxt > int(self._prung[name][ci])
+                        and self._pcomps[ci][name][nxt].ae_compressor()
+                        is not None
+                        and r - int(self._plast[name][ci])
+                        < self.switch_hysteresis):
+                    continue         # decoder re-ship hysteresis (§15.4)
                 delta = self._pcosts[name][nxt] - \
                     self._pcosts[name][alloc[ln]]
                 if spent + delta <= self.budget:
@@ -709,3 +1072,182 @@ class ByteBudget(RateController):
                     changed = True
         return {(ci, name): k for (ci, name), k in alloc.items()
                 if k != self._prung[name][ci]}
+
+
+@dataclasses.dataclass
+class RDBudget(RateController):
+    """Lagrangian rate-distortion water-filling of the shared uplink
+    budget (ROADMAP item 4; Mitchell et al. 2022 frame the FL
+    communication-accuracy trade-off as exactly this problem). Where
+    :class:`ByteBudget` spends marginal bytes by drift *rank*, this
+    controller spends them by marginal distortion *per byte*:
+
+    1. every movable lane's distortion is probed at ALL rungs against its
+       snapshot ring in one batched dispatch (DESIGN.md §15.1);
+    2. each lane's (bytes, distortion) curve is pruned to its lower convex
+       hull (:func:`_hull_prune`) — unfit rungs are excluded, they can
+       neither win nor block (§15.2), and a lane whose CURRENT rung is
+       unfit is held frozen at its current price (no honest reference
+       point; seed the ladder from a pre-pass, as ``fc_ae_ladder(params=)``
+       does, to avoid the cold-start hold);
+    3. a switch onto an AE rung would ship that rung's decoder, so the
+       planner adds ``decoder_sync_bytes / ship_amortize_rounds`` to such
+       rungs' PRICE — the move must earn back its downlink cost in
+       marginal distortion before it can out-bid a stay (§15.3), which is
+       what keeps a boundary-hovering budget from flapping decoders the
+       way un-hysteresed greedy did;
+    4. the multiplier λ is swept over the merged hull steps
+       (:func:`_rd_waterfill`) until the budget is exhausted — marginal
+       distortion per priced byte is equalized across lanes at the stop
+       point, and ``last_lambda`` records λ* for the benchmark's frontier
+       artifact (``lambda_trace`` keeps the per-round history);
+    5. a final integer-allocation top-up (:func:`_rd_topup`) spends any
+       stranded remainder on affordable pruned interior rungs — decoder
+       pricing can bend curves concave so the hull keeps only a jump the
+       budget can't buy, and without the top-up those lanes would sit at
+       the floor while greedy's one-rung walk overtakes them.
+
+    Frozen/ineligible participants are priced at their current rung like
+    greedy; a budget below the all-cheapest floor drops every movable
+    lane to rung 0, mirroring :class:`ByteBudget` exactly (the
+    differential contract). State (rung occupancy, fitted flags, cached
+    distortions, every rung's AE params) rides the shared
+    ``state_meta``/``state_tree`` checkpoint path bit-exactly."""
+
+    budget: float = float("inf")
+    cooldown: int = 0
+    # decoder-ship amortization horizon (rounds): the price of switching
+    # onto an AE rung includes its decoder ship spread over this many
+    # rounds (DESIGN.md §15.3)
+    ship_amortize_rounds: float = 8.0
+    name: str = "rd_budget"
+    # per-plan λ* telemetry ``[(round, λ*)]`` for the benchmark's Pareto
+    # artifact; diagnostic only — it feeds no planning decision and does
+    # not ride the checkpoint
+    lambda_trace: List[Tuple[int, Optional[float]]] = dataclasses.field(
+        default_factory=list, repr=False)
+
+    # λ* of the last plan (None when no step was taken / no plan yet)
+    last_lambda = None
+
+    def _lane_points(self, ci: int, cur: int, col: np.ndarray
+                     ) -> Optional[List[Tuple[int, float, float, float]]]:
+        """One client's candidate operating points ``(rung, cost, price,
+        dist)`` from its probed error column; None when the current rung
+        is unfit (hold the lane, §15.2)."""
+        if not self._fitted[ci, cur]:
+            return None
+        pts = []
+        for k in range(self.n_rungs):
+            if not self._fitted[ci, k]:
+                continue
+            price = cost = float(self._costs[k])
+            sub = self._comps[ci][k].ae_compressor()
+            if k != cur and sub is not None:
+                price += (ae.decoder_sync_bytes(sub.codec_params())
+                          / max(self.ship_amortize_rounds, 1e-9))
+            pts.append((k, cost, price, float(col[k])))
+        return pts
+
+    def _lane_points_group(self, ci: int, name: str, cur: int,
+                           col: np.ndarray
+                           ) -> Optional[List[Tuple[int, float, float,
+                                                    float]]]:
+        """Per-partition twin of :meth:`_lane_points`."""
+        if not self._pfitted[name][ci, cur]:
+            return None
+        pts = []
+        for k in range(self._pnrungs[name]):
+            if not self._pfitted[name][ci, k]:
+                continue
+            price = cost = float(self._pcosts[name][k])
+            sub = self._pcomps[ci][name][k].ae_compressor()
+            if k != cur and sub is not None:
+                price += (ae.decoder_sync_bytes(sub.codec_params())
+                          / max(self.ship_amortize_rounds, 1e-9))
+            pts.append((k, cost, price, float(col[k])))
+        return pts
+
+    def plan(self, run, r: int, participants: List[int]) -> Dict:
+        moves = (self._plan_lanes(run, r, participants)
+                 if self._partitioned
+                 else self._plan_flat(run, r, participants))
+        self.lambda_trace.append((r, self.last_lambda))
+        return moves
+
+    def _plan_flat(self, run, r: int, participants: List[int]) -> Dict:
+        parts = self._eligible(run, r, participants, self.cooldown)
+        if not parts:
+            self.last_lambda = None
+            return {}
+        fixed_spend = sum(self._costs[self._rung[ci]]
+                          for ci in set(participants) - set(parts))
+        errs = self._probe_all(run, parts)
+        curves: Dict[int, Tuple[List, float]] = {}
+        raw: Dict[int, List] = {}
+        for j, ci in enumerate(parts):
+            cur = int(self._rung[ci])
+            pts = self._lane_points(ci, cur, errs[:, j])
+            if pts is None:          # unfit current rung: hold the lane
+                fixed_spend += self._costs[cur]
+                continue
+            curves[ci] = (_hull_prune(pts), float(errs[cur, j]))
+            raw[ci] = pts
+        alloc, lam = (_rd_waterfill(curves, self.budget, fixed_spend)
+                      if curves else ({}, None))
+        if alloc is None:            # below the all-cheapest floor:
+            self.last_lambda = None  # mirror ByteBudget exactly
+            return {ci: 0 for ci in parts if self._rung[ci] != 0}
+        chosen = {ci: curves[ci][0][idx] for ci, idx in alloc.items()}
+        spent = fixed_spend + sum(p[1] for p in chosen.values())
+        tlam = _rd_topup(raw, chosen, self.budget, spent)
+        self.last_lambda = tlam if tlam is not None else lam
+        moves: Dict[int, int] = {}
+        for ci, p in chosen.items():
+            if p[0] != int(self._rung[ci]):
+                moves[ci] = p[0]
+        return moves
+
+    def _plan_lanes(self, run, r: int, participants: List[int]) -> Dict:
+        """Per-partition water-fill under the ONE shared budget: every
+        (client, group) lane's hull competes in the same λ sweep, so
+        marginal distortion per priced byte equalizes across layers as
+        well as clients (DESIGN.md §15.3 over §10.3)."""
+        participants = sorted(set(participants))
+        lanes = self._eligible_lanes(run, r, participants, self.cooldown)
+        if not lanes:
+            self.last_lambda = None
+            return {}
+        lane_set = set(lanes)
+        fixed_spend = sum(
+            self._pcosts[name][self._prung[name][ci]]
+            for ci in participants for name in self.partition.names
+            if (ci, name) not in lane_set)
+        errs = self._probe_all_lanes(run, lanes)
+        curves: Dict[Tuple[int, str], Tuple[List, float]] = {}
+        raw: Dict[Tuple[int, str], List] = {}
+        for ln in lanes:
+            ci, name = ln
+            cur = int(self._prung[name][ci])
+            pts = self._lane_points_group(ci, name, cur, errs[ln])
+            if pts is None:          # unfit current rung: hold the lane
+                fixed_spend += self._pcosts[name][cur]
+                continue
+            curves[ln] = (_hull_prune(pts), float(errs[ln][cur]))
+            raw[ln] = pts
+        alloc, lam = (_rd_waterfill(curves, self.budget, fixed_spend)
+                      if curves else ({}, None))
+        if alloc is None:            # below the all-cheapest floor:
+            self.last_lambda = None  # mirror ByteBudget exactly
+            return {(ci, name): 0 for ci, name in lanes
+                    if self._prung[name][ci] != 0}
+        chosen = {ln: curves[ln][0][idx] for ln, idx in alloc.items()}
+        spent = fixed_spend + sum(p[1] for p in chosen.values())
+        tlam = _rd_topup(raw, chosen, self.budget, spent)
+        self.last_lambda = tlam if tlam is not None else lam
+        moves: Dict[Tuple[int, str], int] = {}
+        for ln, p in chosen.items():
+            ci, name = ln
+            if p[0] != int(self._prung[name][ci]):
+                moves[ln] = p[0]
+        return moves

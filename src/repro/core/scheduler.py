@@ -47,8 +47,8 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import codec
-from repro.core.aggregate import (apply_update, normalize_weights,
-                                  staleness_weights)
+from repro.core.aggregate import (apply_update, distortion_weights,
+                                  normalize_weights, staleness_weights)
 from repro.core.compressor import (codec_stats, ef_compensate, ef_residual,
                                    tree_bytes)
 
@@ -514,6 +514,15 @@ class AsyncBuffered(RoundScheduler):
     buffer_k: int = 2
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
     staleness_power: float = 0.5
+    # distortion-weighted staleness (DESIGN.md §15.5): with a rate
+    # controller attached, each drained update is further discounted by
+    # d_i = (1 + e_i) ** -distortion_power where e_i is the client's
+    # probed current-rung reconstruction error — stale AND distorted
+    # updates are discounted coherently, w_i * (1+s_i)^-p * d_i. The
+    # distortion comes from the controller's batched probe cache
+    # (RateController.distortion_of), so no extra device syncs; 0.0 (the
+    # default) preserves existing trajectories bit-exactly.
+    distortion_power: float = 0.0
     engine: str = "heap"               # "heap" (oracle) | "vector" (SoA)
     name: str = "async_buffered"
 
@@ -662,10 +671,16 @@ class AsyncBuffered(RoundScheduler):
             stales.append(self._version - state.version)
             arrived.append(ci)
 
-        run.global_params = _server_aggregate(
-            run, encoded,
-            staleness_weights([e.weight for e in encoded], stales,
-                              self.staleness_power))
+        weights = staleness_weights([e.weight for e in encoded], stales,
+                                    self.staleness_power)
+        if self.distortion_power:
+            rc = run.ratecontrol
+            weights = distortion_weights(
+                weights,
+                [rc.distortion_of(ci) if rc is not None else None
+                 for ci in arrived],
+                self.distortion_power)
+        run.global_params = _server_aggregate(run, encoded, weights)
         self._version += 1
         for ci in arrived:                 # re-dispatch with the new model,
             state = run.clients[ci]        # deferred to the next round so

@@ -263,6 +263,51 @@ def test_committed_baseline_proves_grouped_overhead_bound():
     assert float(m.group(1)) <= 1.3
 
 
+def test_committed_baseline_rate_control_pareto_is_valid():
+    """fl_rate_control (DESIGN.md §15.6) carries the rate-control Pareto
+    frontier: timed policy rows for the regression gate (≥4 for median
+    rescaling) plus zero-µs per-round ``pareto_*`` frontier rows the gate
+    skips. The acceptance claim rides in the artifact itself: at the
+    matched uplink budget, the Lagrangian RDBudget's final-round accuracy
+    is no worse than greedy ByteBudget's."""
+    path = os.path.join(BASELINE_DIR, "BENCH_fl_rate_control.json")
+    assert os.path.exists(path), (
+        "missing committed baseline — regenerate with "
+        "`python -m benchmarks.run --tables fl_rate_control "
+        "--json benchmarks/baselines`")
+    doc = check_regression.load_artifact(path)
+    assert doc["name"] == "fl_rate_control" and "error" not in doc
+    assert "roofline" not in doc        # not a ROOFLINES table
+    rows = {r["name"]: r for r in doc["rows"]}
+    timed = [n for n, r in rows.items() if r["us_per_call"] > 0]
+    assert len(timed) >= 4              # enough rows for median rescaling
+    for policy in ("fixed_r0", "fixed_r1", "fixed_r2", "distortion_target",
+                   "byte_budget", "rd_budget"):
+        assert f"rate_{policy}" in timed
+
+    def acc(name):
+        m = re.search(r"acc=([\d.]+)", rows[name]["derived"])
+        assert m, rows[name]["derived"]
+        return float(m.group(1))
+
+    assert acc("rate_rd_budget") >= acc("rate_byte_budget")
+    # per-round frontier rows: zero-µs (gate-skipped), one per policy per
+    # round, monotone cumulative uplink
+    pareto = sorted(n for n in rows if n.startswith("pareto_"))
+    assert pareto and all(rows[n]["us_per_call"] == 0.0 for n in pareto)
+    for policy in ("byte_budget", "rd_budget", "fixed_r0"):
+        per_round = sorted(n for n in pareto
+                           if n.startswith(f"pareto_{policy}_r"))
+        assert len(per_round) >= 2
+        ups = [float(re.search(r"cum_up_kB=([\d.]+)",
+                               rows[n]["derived"]).group(1))
+               for n in per_round]
+        assert ups == sorted(ups)
+    # the λ trace survives into the artifact for the RD rows
+    assert any("lambda=" in rows[n]["derived"]
+               for n in pareto if n.startswith("pareto_rd_budget"))
+
+
 def test_committed_baseline_roofline_shape():
     doc = check_regression.load_artifact(
         os.path.join(BASELINE_DIR, "BENCH_fl_decode_agg.json"))

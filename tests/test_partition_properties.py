@@ -582,10 +582,17 @@ def test_partition_ladder_ae_switch_refits_group_and_ships_decoder():
     pm = by_layer_partition(TMPL)
     d0 = pm.group_size("dense0")
     ae_cfg = AEConfig(input_dim=d0, encoder_hidden=(16,), latent_dim=8)
+    def _ae_rung(ci, n):
+        comp = FCAECompressor(
+            init_fc_ae(jax.random.PRNGKey(40 + ci), ae_cfg), ae_cfg)
+        # step-downs require a fitted neighbor (DESIGN.md §15.2); this test
+        # targets the refit-and-ship mechanics at switch time, so mark the
+        # rung prefit as a prepass-seeded ladder would be
+        comp.prefit = True
+        return comp
+
     rungs = {
-        "dense0": [lambda ci, n: FCAECompressor(
-                       init_fc_ae(jax.random.PRNGKey(40 + ci), ae_cfg),
-                       ae_cfg),
+        "dense0": [_ae_rung,
                    lambda ci, n: IdentityCompressor()],
         "dense1": [lambda ci, n: QuantizeCompressor(bits=8)]}
     rc = DistortionTarget(ladder=partition_ladder(2, pm, rungs),

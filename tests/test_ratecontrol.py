@@ -546,6 +546,250 @@ def test_ladder_with_mismatched_rung_specs_is_rejected():
             eval_data=ev, ratecontrol=FixedRate(ladder=ladder))
 
 
+# ------------------------------------- batched probing (DESIGN.md §15.1)
+def test_batched_probe_matches_single_probe_oracle():
+    """The one-dispatch (rung × lane) distortion matrix must equal the
+    per-(lane, rung) blocking probes it replaced — `_rung_err` is kept
+    exactly as this differential oracle."""
+    data, ev = _federation(3)
+    rc = DistortionTarget(ladder=_pointwise_ladder(3), target=5e-9,
+                          margin=1e-3, min_snapshots=1, cooldown=1)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=1, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    run.run()
+    lanes = [0, 1, 2]
+    errs = rc._probe_all(run, lanes)
+    assert errs.shape == (3, 3)
+    for k in range(3):
+        for j, ci in enumerate(lanes):
+            want = rc._rung_err(run, ci, k, run.clients[ci].snapshots[-1])
+            np.testing.assert_allclose(errs[k, j], want, rtol=1e-6,
+                                       atol=1e-12)
+    # the current-rung row is cached for the async distortion discount
+    for ci in lanes:
+        assert rc.distortion_of(ci) == pytest.approx(
+            float(errs[int(rc._rung[ci]), ci]))
+
+
+@pytest.mark.parametrize("kind", ["distortion", "bytebudget", "rd"])
+def test_plan_probes_in_one_dispatch_per_round(kind, monkeypatch):
+    """Sync-count regression (the §15.1 bugfix): planning must never fall
+    back to the per-(lane, rung) blocking probes, and the batched dispatch
+    count is exactly one per planned round."""
+    from repro.core import RDBudget
+
+    def boom(*a, **k):                    # pragma: no cover - must not run
+        raise AssertionError("per-lane blocking probe called during plan")
+
+    monkeypatch.setattr(RateController, "_rung_err", boom)
+    monkeypatch.setattr(RateController, "_lane_rung_err", boom)
+    data, ev = _federation(3)
+    rc = {
+        "distortion": lambda: DistortionTarget(
+            ladder=_pointwise_ladder(3), target=5e-9, margin=1e-3,
+            min_snapshots=1, cooldown=1),
+        "bytebudget": lambda: ByteBudget(
+            ladder=_pointwise_ladder(3), budget=float("inf"),
+            min_snapshots=1),
+        "rd": lambda: RDBudget(
+            ladder=_pointwise_ladder(3), budget=float("inf"),
+            min_snapshots=1),
+    }[kind]()
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=3, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    run.run()
+    assert rc.probe_dispatches == 3       # one batched dispatch per round
+
+
+def test_partitioned_plan_probes_one_dispatch_per_group(monkeypatch):
+    """Partitioned twin: segment sizes differ per group, so the batched
+    probe costs one dispatch per (round, group) — never per lane."""
+    from repro.core import (RDBudget, by_layer_partition, partition_ladder)
+    from repro.models.classifiers import init_classifier
+
+    def boom(*a, **k):                    # pragma: no cover - must not run
+        raise AssertionError("per-lane blocking probe called during plan")
+
+    monkeypatch.setattr(RateController, "_rung_err", boom)
+    monkeypatch.setattr(RateController, "_lane_rung_err", boom)
+    pm = by_layer_partition(init_classifier(jax.random.PRNGKey(0),
+                                            MNIST_CLASSIFIER))
+    rungs = {name: [lambda ci, n: QuantizeCompressor(bits=4),
+                    lambda ci, n: QuantizeCompressor(bits=8),
+                    lambda ci, n: IdentityCompressor()]
+             for name in pm.names}
+    rc = RDBudget(ladder=partition_ladder(2, pm, rungs), partition=pm,
+                  budget=float("inf"), min_snapshots=1)
+    data, ev = _federation(2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    run.run()
+    assert rc.probe_dispatches == 2 * len(pm.names)
+
+
+# --------------------------- decoder flapping hysteresis (DESIGN.md §15.4)
+class _FlappingBudget(ByteBudget):
+    """Test double: a budget oscillating between `hi` (room for the AE
+    rung) and `lo` (the all-q4 floor) every round — the boundary-hover
+    that used to re-ship decoders on every upward flip."""
+
+    def __init__(self, hi, lo, **kw):
+        super().__init__(**kw)
+        self.hi, self.lo = hi, lo
+
+    def plan(self, run, r, participants):
+        self.budget = self.hi if r % 2 == 0 else self.lo
+        return super().plan(run, r, participants)
+
+
+def _flap_ladder(n_clients):
+    """q4 → big-latent AE → identity: the AE rung costs MORE than q4, so
+    a budget flap moves clients on/off an AE rung (shipping decoders)."""
+    cfg = AEConfig(input_dim=P, encoder_hidden=(16,), latent_dim=2560)
+    return [[QuantizeCompressor(bits=4),
+             FCAECompressor(ae.init_fc_ae(jax.random.PRNGKey(7 + ci), cfg),
+                            cfg),
+             IdentityCompressor()] for ci in range(n_clients)]
+
+
+def _flap_run(hysteresis, n_rounds=6):
+    data, ev = _federation(2)
+    ladder = _flap_ladder(2)
+    costs = [wire_bytes(ladder[0][k].spec(P), ladder[0][k].codec_params())
+             for k in range(3)]
+    assert costs[0] < costs[1] < costs[2]
+    rc = _FlappingBudget(hi=2 * costs[1], lo=2 * costs[0], ladder=ladder,
+                         min_snapshots=1, switch_hysteresis=hysteresis,
+                         refit_epochs=1, refit_batch=2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    hist = run.run()
+    per_ship = decoder_sync_bytes(ladder[0][1].params)
+    return hist, per_ship
+
+
+def test_byte_budget_hysteresis_pins_decoder_bytes_under_flapping():
+    """Regression (the §15.4 bugfix): under a period-2 budget flap,
+    legacy greedy (hysteresis=0) re-ships every client's decoder every
+    up-flip — 6 ships over 6 rounds. With the default hysteresis=2 the
+    up-flip is blocked until the lane has sat 2 rounds, pinning total
+    decoder traffic to exactly 4 ships (rounds 0, 1, 4, 5 switch; only
+    the AE-ward moves ship)."""
+    hist_flappy, per_ship = _flap_run(hysteresis=0)
+    ships_flappy = sum(len(r.ae_syncs) for r in hist_flappy)
+    bytes_flappy = sum(r.bytes_decoder for r in hist_flappy)
+    assert ships_flappy == 6              # every even round re-ships both
+    assert bytes_flappy == pytest.approx(6 * per_ship)
+
+    hist_hyst, per_ship = _flap_run(hysteresis=2)
+    ships_hyst = sum(len(r.ae_syncs) for r in hist_hyst)
+    bytes_hyst = sum(r.bytes_decoder for r in hist_hyst)
+    assert ships_hyst == 4                # rounds 0 and 4 only
+    assert bytes_hyst == pytest.approx(4 * per_ship)
+    assert bytes_hyst < bytes_flappy
+    # downgrades (off the AE rung) are never blocked: no budget overshoot
+    for rec in hist_hyst:
+        if rec.round % 2 == 1:            # lo rounds end all-q4
+            assert rec.spec_switches == [] or all(
+                s[2] == 0 for s in rec.spec_switches)
+
+
+# ------------------------------- unfit-rung gating (DESIGN.md §15.2)
+def test_byte_budget_unfit_current_rung_cannot_win_bytes():
+    """First-rounds window: a client sitting on a never-fitted AE rung
+    reports garbage distortion — its score must clamp to 0 so it cannot
+    out-bid an honestly-probed client for the one affordable upgrade."""
+    cfg = AEConfig(input_dim=P, encoder_hidden=(16,), latent_dim=32)
+    ladder = [[FCAECompressor(ae.init_fc_ae(jax.random.PRNGKey(20 + ci),
+                                            cfg), cfg),
+               QuantizeCompressor(bits=8), IdentityCompressor()]
+              for ci in range(2)]
+    ladder[0][0].prefit = True            # client 0's AE came from a fit
+    costs = [wire_bytes(ladder[0][k].spec(P), ladder[0][k].codec_params())
+             for k in range(3)]
+    rc = ByteBudget(ladder=ladder, budget=costs[0] + costs[1],
+                    min_snapshots=1, refit_epochs=1, refit_batch=2)
+    data, ev = _federation(2)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=1, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    run.run()
+    # client 1's unprobed-garbage reading would have won by magnitude;
+    # the fitted gate zeroes it, so client 0 takes the upgrade
+    assert rc.rung_of(0) == 1
+    assert rc.rung_of(1) == 0
+
+
+def test_distortion_target_step_down_requires_fitted_neighbor():
+    """A step DOWN must be blocked while the cheaper neighbor has never
+    been fitted (its tiny garbage reading must not qualify); marking the
+    rung fitted unblocks the exact same reading."""
+    cfg = AEConfig(input_dim=P, encoder_hidden=(16,), latent_dim=32)
+    ladder = [[FCAECompressor(ae.init_fc_ae(jax.random.PRNGKey(30), cfg),
+                              cfg),
+               QuantizeCompressor(bits=8)]]
+    rc = DistortionTarget(ladder=ladder, target=0.5, margin=0.9,
+                          min_snapshots=1, cooldown=1, initial_rung=1)
+    data, ev = _federation(1)
+    run = FederatedRun(
+        MNIST_CLASSIFIER, data,
+        FLConfig(n_rounds=1, local_epochs=1, payload="update"),
+        eval_data=ev, ratecontrol=rc)
+    hist = run.run()
+    assert hist[0].spec_switches == []    # neighbor unfit: hold
+    rc._probe_all = lambda run, lanes: np.full((2, len(lanes)), 1e-12)
+    assert rc.plan(run, 5, [0]) == {}     # still unfit, still held
+    rc._fitted[0, 0] = True
+    assert rc.plan(run, 5, [0]) == {0: 0}  # same reading, now trusted
+
+
+def test_rd_budget_holds_unfit_lanes_then_moves_when_seeded():
+    """RDBudget never allocates onto (or away from) never-fitted AE rungs:
+    a fresh-init ladder stays frozen at rung 0 through the first-rounds
+    window, while the same ladder marked pre-fitted tops out under an
+    unbounded budget."""
+    from repro.core import RDBudget
+    data, ev = _federation(2)
+
+    def mk(prefit):
+        ladder = _ae_ladder(2)
+        if prefit:
+            for row in ladder:
+                for comp in row:
+                    comp.prefit = True
+        rc = RDBudget(ladder=ladder, budget=float("inf"), min_snapshots=1,
+                      refit_epochs=1, refit_batch=2)
+        run = FederatedRun(
+            MNIST_CLASSIFIER, data,
+            FLConfig(n_rounds=2, local_epochs=1, payload="update"),
+            eval_data=ev, ratecontrol=rc)
+        if prefit:
+            # fresh random AEs measure seed-luck garbage; pin a monotone
+            # curve (rung 1 strictly better) so the hull keeps both rungs
+            rc._probe_all = lambda run, lanes: np.array(
+                [[0.5] * len(lanes), [0.1] * len(lanes)])
+        return rc, run.run()
+
+    rc, hist = mk(prefit=False)
+    assert all(rec.spec_switches == [] for rec in hist)
+    assert [rc.rung_of(ci) for ci in range(2)] == [0, 0]
+    assert rc.last_lambda is None         # no honest curve, no sweep
+    assert hist[1].bytes_decoder == 0.0   # nothing re-ships after round 0
+
+    rc2, hist2 = mk(prefit=True)
+    assert [rc2.rung_of(ci) for ci in range(2)] == [1, 1]
+    assert sorted(hist2[0].spec_switches) == [(0, 0, 1), (1, 0, 1)]
+
+
 def test_controller_with_sampled_scheduler_switches_participants_only():
     """Partial participation: only sampled clients may switch (decisions
     are end-of-round over the observed cohort)."""

@@ -1,6 +1,6 @@
 """Differential resume-equivalence matrix (DESIGN.md §10.4): one grid over
 {SyncFedAvg, SampledSync, AsyncBuffered} × {no controller, DistortionTarget,
-ByteBudget} × {flat, partitioned} asserting that saving mid-run and
+ByteBudget, RDBudget} × {flat, partitioned} asserting that saving mid-run and
 resuming reproduces the uninterrupted run in BYTES and TRAJECTORY — final
 params bit-exact, per-round byte accounting and metrics equal. This one
 test collapses the per-feature resume checks into a single grid and closes
@@ -18,7 +18,7 @@ from repro.configs.paper import MNIST_CLASSIFIER
 from repro.core import (AsyncBuffered, ByteBudget, DistortionTarget,
                         FLConfig, FederatedRun, IdentityCompressor,
                         LatencyModel, PartitionedCompressor,
-                        QuantizeCompressor, SampledSync,
+                        QuantizeCompressor, RDBudget, SampledSync,
                         by_layer_partition, partition_ladder)
 from repro.data.pipeline import (mnist_like, train_eval_split,
                                  uniform_partition)
@@ -69,6 +69,12 @@ def _controller(kind, layout):
         # genuinely move mid-grid (switch state must survive the resume)
         return DistortionTarget(ladder=ladder, partition=pm, target=5e-9,
                                 margin=1e-3, min_snapshots=1, cooldown=1)
+    if kind == "rd":
+        # unbounded budget: the water-fill walks lanes upward round by
+        # round, so rung occupancy, fitted flags, cached distortions and
+        # λ state all change across the save point
+        return RDBudget(ladder=ladder, partition=pm, budget=float("inf"),
+                        min_snapshots=1)
     assert kind == "bytebudget"
     return ByteBudget(ladder=ladder, partition=pm, budget=float("inf"),
                       min_snapshots=1)
@@ -85,8 +91,11 @@ def _compressors(layout):
 
 
 def _mk(sched, rc, layout, n_rounds, data, ev, soa=False):
-    cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, payload="update",
-                   error_feedback=(rc == "none"))
+    # batch_size must divide into the 32-sample shards or local training
+    # runs zero batches and every cell degenerates to zero updates (no
+    # drift → controllers never move → the grid tests nothing)
+    cfg = FLConfig(n_rounds=n_rounds, local_epochs=1, batch_size=16,
+                   payload="update", error_feedback=(rc == "none"))
     controller = _controller(rc, layout)
     return FederatedRun(
         MNIST_CLASSIFIER, data, cfg,
@@ -130,14 +139,14 @@ def _run_cell(sched, rc, layout, tmp_path, soa=False):
 
 
 @pytest.mark.parametrize("layout", ["flat", "partitioned"])
-@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
+@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget", "rd"])
 @pytest.mark.parametrize("sched", ["sync", "sampled", "async"])
 def test_resume_matrix_bytes_and_trajectory(sched, rc, layout, tmp_path):
     _run_cell(sched, rc, layout, tmp_path)
 
 
 @pytest.mark.parametrize("layout", ["flat", "partitioned"])
-@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget"])
+@pytest.mark.parametrize("rc", ["none", "distortion", "bytebudget", "rd"])
 @pytest.mark.parametrize("sched", ["sampled", "async-vector"])
 def test_resume_matrix_soa(sched, rc, layout, tmp_path):
     """The §12.1/§12.2 cells: struct-of-arrays client state (ring
